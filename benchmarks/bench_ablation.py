@@ -1,0 +1,68 @@
+"""Paper Fig. 20: normalized max temperature + peak power per policy
+(Place / Route / Config and combinations) x SaaS fraction {0, 0.5, 1}."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save, timed
+from repro.core.datacenter import DCConfig
+from repro.core.simulator import (BASELINE, TAPAS, ClusterSim, Policy,
+                                  SimConfig)
+
+POLICIES = [
+    BASELINE,
+    Policy(place=True), Policy(route=True), Policy(config=True),
+    Policy(place=True, route=True), Policy(route=True, config=True),
+    TAPAS,
+]
+
+
+def run(policy, saas_fraction, *, quick=True, seed=1):
+    dc = DCConfig(n_rows=8, racks_per_row=10, servers_per_rack=4)
+    cfg = SimConfig(dc=dc, horizon_h=24.0 if quick else 72.0,
+                    tick_min=10.0 if quick else 5.0, seed=seed,
+                    policy=policy, saas_fraction=saas_fraction)
+    return ClusterSim(cfg).run()
+
+
+def main(quick: bool = True) -> list:
+    rows = []
+    fractions = (0.5,) if quick else (0.0, 0.5, 1.0)
+    table = {}
+    total_us = 0.0
+    for frac in fractions:
+        base = None
+        for pol in (POLICIES if not quick else
+                    [BASELINE, Policy(place=True), Policy(route=True),
+                     Policy(config=True), TAPAS]):
+            res, us = timed(run, pol, frac, quick=quick)
+            total_us += us
+            s = res.summary()
+            if base is None:
+                base = s
+            table[f"saas{frac}_{pol.name}"] = {
+                "temp_norm": round(s["max_temp_c"] / 85.0, 3),
+                "power_norm": round(s["peak_row_power_frac"], 3),
+                "temp_red_pct": round(
+                    100 * (1 - s["max_temp_c"] / base["max_temp_c"]), 1),
+                "power_red_pct": round(
+                    100 * (1 - s["peak_row_power_frac"]
+                           / base["peak_row_power_frac"]), 1),
+                "thermal_events": int(s["thermal_events"]),
+                "quality": round(float(s["mean_quality"]), 3),
+                "unserved": round(float(s["unserved_frac"]), 4),
+            }
+    key = f"saas{fractions[-1]}_{TAPAS.name}"
+    derived = {
+        "tapas_temp_red_pct": table[key]["temp_red_pct"],
+        "tapas_power_red_pct": table[key]["power_red_pct"],
+        "paper_claims": {"temp": 17.0, "power": 23.0},
+        "cells": len(table),
+    }
+    rows.append(emit("ablation_fig20", total_us, derived))
+    save("bench_ablation", table)
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

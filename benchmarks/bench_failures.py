@@ -1,0 +1,31 @@
+"""Paper Table 2: power (UPS) and thermal (AHU) emergencies —
+Baseline vs TAPAS, perf + quality impact on IaaS and SaaS."""
+from __future__ import annotations
+
+from benchmarks.common import emit, save, timed
+from repro.core.datacenter import DCConfig
+from repro.core.failures import table2
+
+
+def main(quick: bool = True) -> list:
+    rows = []
+    dc = DCConfig(n_rows=4 if quick else 8, racks_per_row=10,
+                  servers_per_rack=4)
+    table, us = timed(table2, seed=1, dc=dc)
+    by = {f"{r['failure']}_{r['policy']}": r for r in table}
+    tapas_ups = by.get("ups_place+route+config", {})
+    base_ups = by.get("ups_baseline", {})
+    derived = {
+        "ups_baseline_iaas_perf_pct": base_ups.get("iaas_perf_pct"),
+        "ups_tapas_iaas_perf_pct": tapas_ups.get("iaas_perf_pct"),
+        "ups_tapas_quality_pct": tapas_ups.get("quality_pct"),
+        "paper_claims": {"baseline_perf": -35.0, "tapas_iaas_perf": 0.0,
+                         "tapas_quality": -12.0},
+    }
+    rows.append(emit("failures_table2", us, derived))
+    save("bench_failures", table)
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,32 @@
+"""Paper Fig. 21: time under thermal/power capping vs oversubscription
+ratio (paper: TAPAS sustains +40% servers at <0.7% capping time)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, save, timed
+from repro.core.datacenter import DCConfig
+from repro.core.oversubscribe import max_safe_oversubscription, sweep
+from repro.core.simulator import BASELINE, TAPAS
+
+
+def main(quick: bool = True) -> list:
+    rows = []
+    ratios = (0.0, 0.2, 0.4) if quick else (0.0, 0.1, 0.2, 0.3, 0.4, 0.5)
+    dc = DCConfig(n_rows=8, racks_per_row=10, servers_per_rack=4)
+    table, us = timed(sweep, [BASELINE, TAPAS], ratios, dc=dc,
+                      horizon_h=24.0)
+    safe_base = max_safe_oversubscription(table, "baseline")
+    safe_tapas = max_safe_oversubscription(table, TAPAS.name)
+    derived = {
+        "max_safe_oversub_baseline": safe_base,
+        "max_safe_oversub_tapas": safe_tapas,
+        "paper_claim": {"tapas": 0.4, "capping_budget_pct": 0.7},
+        "points": table,
+    }
+    rows.append(emit("oversubscription_fig21", us, {
+        k: v for k, v in derived.items() if k != "points"}))
+    save("bench_oversubscription", derived)
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

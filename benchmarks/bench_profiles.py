@@ -1,0 +1,62 @@
+"""Paper Figs. 15–16: instance profiles + Pareto frontier, cross-checked
+against the real serving engine (reduced-size llama2) for relative goodput
+vs batch size."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save, timed
+from repro.configs import get_config
+from repro.core import profiles as P
+from repro.models import build_model, local_plan
+from repro.serving import Engine, EngineKnobs, Request
+
+
+def engine_goodput_vs_batch(batches=(1, 2, 4)) -> dict:
+    """Relative engine throughput at different max-batch knobs (the
+    batch-size column of Fig. 15b at smoke scale)."""
+    cfg = get_config("llama2-7b").smoke_config()
+    model = build_model(cfg, local_plan(param_dtype=jnp.bfloat16))
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    out = {}
+    for b in batches:
+        eng = Engine(model, params, max_seq=96, n_slots=max(batches),
+                     knobs=EngineKnobs(max_batch=b))
+        for i in range(8):
+            eng.submit(Request(prompt=list(rng.integers(0, cfg.vocab_size, 8)),
+                               max_new_tokens=12))
+        stats = eng.run()
+        steps = max(len(stats.step_times), 1)
+        out[b] = stats.decode_tokens / steps
+    base = out[batches[0]]
+    return {f"batch_{b}": round(v / base, 2) for b, v in out.items()}
+
+
+def main(quick: bool = True) -> list:
+    rows = []
+    entries, us = timed(P.build_profile)
+    front = P.pareto_frontier(entries)
+    # paper claims: model size dominates the quality axis; frontier exists
+    best = max(entries, key=lambda e: e.goodput)
+    derived = {
+        "config_points": len(entries),
+        "pareto_points": len(front),
+        "best_goodput_cfg": f"{best.cfg.size}/tp{best.cfg.tp}/b{best.cfg.batch}",
+        "quality_7b_vs_70b": round(
+            next(e.quality for e in entries if e.cfg.size == "7b"
+                 and e.cfg.quant == "bf16"), 2),
+    }
+    rows.append(emit("profiles_pareto", us, derived))
+
+    gp, us = timed(engine_goodput_vs_batch)
+    gp["monotone"] = bool(gp["batch_4"] >= gp["batch_1"])
+    rows.append(emit("profiles_engine_batch_knob", us, gp))
+    save("bench_profiles", {"pareto": derived, "engine": gp})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

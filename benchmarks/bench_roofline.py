@@ -1,0 +1,70 @@
+"""Roofline table (deliverable g): aggregates the dry-run cell JSONs into
+the per-(arch x shape x mesh) three-term table for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import emit, save
+
+DRYRUN = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load_cells(mesh: str = "16x16", tag: str = "") -> list:
+    cells = []
+    suffix = f"_{tag}.json" if tag else ".json"
+    for f in sorted(DRYRUN.glob(f"*_{mesh}{suffix}")):
+        if not tag and f.stem.count("_") > 2:  # skip tagged variants
+            parts = f.stem.split("_")
+            if parts[-1] != mesh.replace("x", "x"):
+                continue
+        try:
+            cells.append(json.loads(f.read_text()))
+        except json.JSONDecodeError:
+            continue
+    return cells
+
+
+def table_rows(cells: list) -> list:
+    rows = []
+    for c in cells:
+        rows.append({
+            "arch": c["arch"], "shape": c["shape"], "mesh": c["mesh"],
+            "t_compute_s": round(c["t_compute_s"], 4),
+            "t_memory_s": round(c["t_memory_s"], 4),
+            "t_collective_s": round(c["t_collective_s"], 4),
+            "bottleneck": c["bottleneck"],
+            "model_flops": f"{c['model_flops']:.3e}",
+            "useful_flops_ratio": round(c["useful_flops_ratio"], 3),
+            "roofline_fraction": round(c["roofline_fraction"], 4),
+            "mem_gb": round(c.get("peak_mem_per_dev_gb", 0.0), 2),
+        })
+    return rows
+
+
+def main(quick: bool = True) -> list:
+    out = []
+    cells = load_cells("16x16")
+    rows = table_rows(cells)
+    if not rows:
+        out.append(emit("roofline_table", 0, {"cells": 0,
+                                              "note": "run launch/dryrun first"}))
+        return out
+    worst = min(rows, key=lambda r: r["roofline_fraction"] or 1e9)
+    coll_bound = [r for r in rows if r["bottleneck"] == "collective"]
+    derived = {
+        "cells_single_pod": len(rows),
+        "worst_fraction": f"{worst['arch']}x{worst['shape']}"
+                          f"={worst['roofline_fraction']}",
+        "collective_bound_cells": len(coll_bound),
+        "bottleneck_histogram": {
+            b: sum(1 for r in rows if r["bottleneck"] == b)
+            for b in ("compute", "memory", "collective")},
+    }
+    out.append(emit("roofline_table", 0, derived))
+    save("bench_roofline", {"rows": rows, "summary": derived})
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+RESULTS.mkdir(exist_ok=True)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6  # us
+
+
+def emit(name: str, us: float, derived: dict) -> str:
+    line = f"{name},{us:.0f},{json.dumps(derived, default=str)}"
+    print(line)
+    return line
+
+
+def save(name: str, payload) -> None:
+    (RESULTS / f"{name}.json").write_text(
+        json.dumps(payload, indent=1, default=str))

@@ -1,0 +1,53 @@
+"""Benchmark harness — one bench per paper table/figure + roofline/kernels.
+
+Prints ``name,us_per_call,derived`` CSV.  Default = quick mode (CI-sized);
+``--full`` reproduces the paper-scale settings (week-long sim, 992 servers,
+all SaaS fractions, 6-point oversubscription sweep).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="", help="comma list of bench names")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (bench_ablation, bench_cluster_hour,
+                            bench_failures, bench_kernels,
+                            bench_oversubscription, bench_profiles,
+                            bench_roofline, bench_week_sim)
+    benches = {
+        "profiles": bench_profiles,          # Fig. 15/16
+        "cluster_hour": bench_cluster_hour,  # Fig. 18
+        "week_sim": bench_week_sim,          # Fig. 19
+        "ablation": bench_ablation,          # Fig. 20
+        "oversubscription": bench_oversubscription,  # Fig. 21
+        "failures": bench_failures,          # Table 2
+        "kernels": bench_kernels,            # Pallas vs oracle
+        "roofline": bench_roofline,          # dry-run aggregation
+    }
+    only = {s for s in args.only.split(",") if s}
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = []
+    for name, mod in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            mod.main(quick=quick)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"{name},0,{{\"error\": \"{e!r}\"}}", file=sys.stderr)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"bench failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Failure drill (paper §5.4, Table 2): UPS and AHU emergencies,
+Baseline vs TAPAS.
+
+    PYTHONPATH=src python examples/failure_drill.py
+"""
+from repro.core.datacenter import DCConfig
+from repro.core.failures import run_drill
+from repro.core.simulator import BASELINE, TAPAS
+
+
+def main() -> None:
+    dc = DCConfig(n_rows=4, racks_per_row=5, servers_per_rack=4)
+    print(f"{'failure':<8}{'policy':<22}{'IaaS perf':>10}{'SaaS perf':>10}"
+          f"{'quality':>9}")
+    for kind in ("ups", "thermal"):
+        for pol in (BASELINE, TAPAS):
+            r = run_drill(kind, pol, dc=dc, seed=1, horizon_h=18.0)
+            row = r.row()
+            print(f"{kind:<8}{row['policy']:<22}"
+                  f"{row['iaas_perf_pct']:>9.1f}%{row['saas_perf_pct']:>9.1f}%"
+                  f"{row['quality_pct']:>8.1f}%")
+    print("\nTAPAS absorbs the emergency by steering + reconfiguring SaaS "
+          "(bounded quality cost) instead of uniform frequency caps.")
+
+
+if __name__ == "__main__":
+    main()

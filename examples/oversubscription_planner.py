@@ -1,0 +1,28 @@
+"""Oversubscription planner (paper §4.4/§5.3): use the TAPAS simulator with
+an estimated workload to size how many extra racks fit the existing
+cooling/power envelopes.
+
+    PYTHONPATH=src python examples/oversubscription_planner.py
+"""
+from repro.core.datacenter import DCConfig
+from repro.core.oversubscribe import max_safe_oversubscription, sweep
+from repro.core.simulator import BASELINE, TAPAS
+
+
+def main() -> None:
+    dc = DCConfig(n_rows=4, racks_per_row=5, servers_per_rack=4)
+    rows = sweep([BASELINE, TAPAS], ratios=(0.0, 0.2, 0.4), dc=dc,
+                 horizon_h=12.0, seed=1)
+    print(f"{'oversub':>8}{'policy':<22}{'thermal%':>10}{'power%':>8}"
+          f"{'unserved%':>10}")
+    for r in rows:
+        print(f"{r['oversub']:>8.0%}{r['policy']:<22}"
+              f"{r['thermal_capped_pct']:>10.3f}{r['power_capped_pct']:>8.3f}"
+              f"{r['unserved_pct']:>10.2f}")
+    for pol in ("baseline", TAPAS.name):
+        safe = max_safe_oversubscription(rows, pol)
+        print(f"max safe oversubscription ({pol}): {safe:.0%}")
+
+
+if __name__ == "__main__":
+    main()

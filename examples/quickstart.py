@@ -1,0 +1,61 @@
+"""Quickstart: build an assigned architecture, train it a little, serve it.
+
+    PYTHONPATH=src python examples/quickstart.py [arch]
+
+Everything runs at smoke scale on CPU; the identical code paths run the
+full configs on a TPU pod via launch/ (see README).
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model, local_plan
+from repro.serving import Engine, EngineKnobs, Request
+from repro.training.data import DataConfig, TokenPipeline
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import init_opt_state, make_train_step
+
+
+def main(arch: str = "qwen3-1.7b") -> None:
+    cfg = get_config(arch).smoke_config()
+    print(f"== {arch} (reduced config: {cfg.num_layers}L d={cfg.d_model}) ==")
+    model = build_model(cfg, local_plan(param_dtype=jnp.float32))
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"params: {n_params:,}")
+
+    # --- train a few steps ---
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=3e-3, warmup_steps=2,
+                                                      total_steps=10)))
+    opt = init_opt_state(params)
+    pipe = TokenPipeline(DataConfig(cfg.vocab_size, batch=8, seq_len=64))
+    for i in range(10):
+        if cfg.input_kind == "embeds":
+            x, y = pipe.next_embed_batch(cfg.d_model)
+        else:
+            x, y = pipe.next_batch()
+        params, opt, m = step(params, opt, x, y)
+        if i % 3 == 0:
+            print(f"  step {i}: loss {float(m['loss']):.4f}")
+
+    # --- serve it ---
+    if cfg.encoder_only:
+        print("encoder-only arch: no decode; done.")
+        return
+    eng = Engine(model, params, max_seq=96, n_slots=4,
+                 knobs=EngineKnobs(max_batch=4))
+    rng = np.random.default_rng(0)
+    for i in range(6):
+        eng.submit(Request(prompt=list(rng.integers(0, cfg.vocab_size, 12)),
+                           max_new_tokens=8, customer=f"c{i % 2}"))
+    stats = eng.run()
+    print(f"served {len(stats.completed)} requests, "
+          f"{stats.decode_tokens} decode tokens, "
+          f"goodput {eng.goodput(ttft_slo=50, tbt_slo=5):.2f} tok/step")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "qwen3-1.7b")

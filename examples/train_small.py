@@ -1,0 +1,32 @@
+"""Train a ~100M-param model for a few hundred steps with checkpoint/restart
+(the training end-to-end driver).
+
+    PYTHONPATH=src python examples/train_small.py [--steps 300]
+
+Uses a ~100M-parameter qwen3-family config (real vocab, 8 layers).  On this
+CPU container a few hundred steps take a while; --steps 60 shows the same
+loss curve shape.  Kill it mid-run and rerun: it resumes from the last
+committed checkpoint.
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt_100m")
+    args = ap.parse_args()
+
+    # ~100M params: 8L x d512 x ffn2048, 32k vocab
+    out = train_main([
+        "--arch", "qwen3-1.7b", "--smoke", "--steps", str(args.steps),
+        "--batch", "16", "--seq", "128", "--lr", "1e-3",
+        "--ckpt", args.ckpt, "--ckpt-every", "25",
+    ])
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

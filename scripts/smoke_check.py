@@ -1,0 +1,45 @@
+"""Ad-hoc developer smoke: every arch, reduced config, loss+prefill+decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, get_config
+from repro.models import build_model, local_plan
+
+
+def run(name: str) -> None:
+    cfg = get_config(name).smoke_config()
+    plan = local_plan(param_dtype=jnp.float32)
+    model = build_model(cfg, plan)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    n_leaves = len(jax.tree.leaves(params))
+    B, S = 2, 32
+    if cfg.input_kind == "embeds":
+        inputs = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        inputs = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+    loss = jax.jit(model.loss)(params, inputs, labels)
+    assert jnp.isfinite(loss), f"{name}: loss not finite: {loss}"
+    msgs = [f"loss={float(loss):.3f}"]
+    if not cfg.encoder_only:
+        logits, cache = jax.jit(model.prefill)(params, inputs)
+        assert jnp.all(jnp.isfinite(logits[:, : cfg.vocab_size]))
+        tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+        pos = jnp.full((B,), S, jnp.int32)
+        cache2 = model.init_cache(B, S + 8)
+        # copy prefill cache into the bigger decode buffer is engine work;
+        # here just run a decode step on a fresh cache for shape sanity
+        logits2, cache2 = jax.jit(model.decode_step)(params, cache2, tok, pos % (S + 8))
+        assert logits2.shape[0] == B
+        assert jnp.all(jnp.isfinite(logits2[:, : cfg.vocab_size]))
+        msgs.append("decode ok")
+    print(f"[ok] {name}: params={n_leaves} leaves, " + ", ".join(msgs))
+
+
+if __name__ == "__main__":
+    names = sys.argv[1:] or ASSIGNED + ["llama2-7b"]
+    for n in names:
+        run(n)

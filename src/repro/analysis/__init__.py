@@ -1,0 +1,10 @@
+from repro.analysis.roofline import (
+    HW,
+    RooflineReport,
+    collective_bytes_from_hlo,
+    model_flops,
+    roofline_terms,
+)
+
+__all__ = ["HW", "RooflineReport", "collective_bytes_from_hlo",
+           "model_flops", "roofline_terms"]

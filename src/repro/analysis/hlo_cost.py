@@ -1,0 +1,411 @@
+"""Mini HLO-text cost analyzer with while-loop trip-count multiplication.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which makes it
+useless for scan-over-layers models (every layer lives in one loop body).
+This module parses the optimized (SPMD-partitioned, per-device) HLO text
+and computes:
+
+  * flops  — dots: 2 * result_elems * contracted_elems; elementwise ops:
+    result elems (counted inside fusion bodies too);
+  * bytes  — HBM-traffic proxy: operand + result bytes at fusion/dot/copy/
+    collective boundaries (fusion-internal ops are VMEM-resident, not
+    counted), matching HloCostAnalysis conventions;
+  * collective bytes — operand bytes per collective kind;
+
+with every while body multiplied by its ``known_trip_count`` backend config
+(nested loops multiply through).  Values are per partition (= per chip).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e4m3": 1, "f8e5m2": 1, "f8e3m4": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[="\{:\s]+n["\s:]+"?(\d+)')
+_CALL_ATTR_RE = re.compile(r"(?:calls|body)=%([\w.\-]+)")
+_COND_ATTR_RE = re.compile(r"condition=%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+# ops that move no data / cost nothing
+_FREE = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+         "after-all", "add-dependency", "partition-id", "replica-id",
+         "opt-barrier"}
+
+
+def _shape_info(type_text: str) -> tuple[int, int]:
+    """Return (bytes, elems) summed over every shape token in the text."""
+    total_b = 0
+    total_e = 0
+    for m in _SHAPE_RE.finditer(type_text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total_e += n
+        total_b += n * _DTYPE_BYTES[dt]
+    return total_b, total_e
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_type: str
+    operands: list
+    attrs: str
+    result_bytes: int = 0
+    result_elems: int = 0
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = field(default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_count: float = 0.0
+    unknown_loops: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        for k in COLLECTIVES:
+            self.coll[k] += mult * other.coll[k]
+        self.coll_count += mult * other.coll_count
+        self.unknown_loops += other.unknown_loops
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def _split_instruction(line: str) -> Instr | None:
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.group(1), m.group(2)
+    # rhs = "TYPE opcode(operands), attrs"; TYPE may be a (tuple, ...)
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        result_type = rhs[: i + 1]
+        rest = rhs[i + 1:].strip()
+    else:
+        sp = rhs.find(" ")
+        result_type = rhs[:sp]
+        rest = rhs[sp + 1:].strip()
+    pi = rest.find("(")
+    if pi < 0:
+        return None
+    opcode = rest[:pi].strip()
+    depth = 0
+    end = pi
+    for i in range(pi, len(rest)):
+        depth += rest[i] == "("
+        depth -= rest[i] == ")"
+        if depth == 0:
+            end = i
+            break
+    operand_text = rest[pi + 1: end]
+    attrs = rest[end + 1:]
+    operands = [o.strip().lstrip("%") for o in _split_top_commas(operand_text)]
+    rb, re_ = _shape_info(result_type)
+    return Instr(name, opcode, result_type, [o for o in operands if o],
+                 attrs, rb, re_)
+
+
+def _split_top_commas(s: str) -> list:
+    parts = []
+    depth = 0
+    cur = []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    return parts
+
+
+class HloModuleCost:
+    def __init__(self, hlo_text: str):
+        self.computations: dict = {}
+        self.entry: str | None = None
+        self._parse(hlo_text)
+        self._memo: dict = {}
+
+    def _parse(self, text: str) -> None:
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr and "->" in line and line.endswith("{"):
+                cur = hdr.group(1)
+                self.computations[cur] = []
+                if line.lstrip().startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            ins = _split_instruction(line)
+            if ins is not None:
+                self.computations[cur].append(ins)
+        if self.entry is None and self.computations:
+            self.entry = next(reversed(self.computations))
+
+    # ------------------------------------------------------------------
+    def cost(self) -> Cost:
+        return self._comp_cost(self.entry, count_bytes=True)
+
+    def _comp_cost(self, comp: str, *, count_bytes: bool) -> Cost:
+        key = (comp, count_bytes)
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        instrs = self.computations.get(comp, [])
+        symtab = {i.name: i for i in instrs}
+        for ins in instrs:
+            total.add(self._instr_cost(ins, symtab, count_bytes=count_bytes))
+        self._memo[key] = total
+        return total
+
+    def _operand_bytes(self, ins: Instr, symtab: dict) -> int:
+        b = 0
+        for op in ins.operands:
+            src = symtab.get(op)
+            if src is not None:
+                b += src.result_bytes
+        return b
+
+    def _fusion_operand_bytes(self, ins: Instr, symtab: dict,
+                              inner_name: str | None) -> int:
+        """Operand bytes for a fusion, slice-aware: a parameter that is only
+        consumed through (dynamic-)slices/gathers inside the fusion is
+        charged at the sliced size, not the full operand (e.g. the per-layer
+        dynamic-slice of scan-stacked weights)."""
+        inner = self.computations.get(inner_name or "", [])
+        if not inner:
+            return self._operand_bytes(ins, symtab)
+        param_of = {}  # inner instr name -> operand index
+        for iins in inner:
+            if iins.opcode == "parameter" and iins.operands:
+                try:
+                    param_of[iins.name] = int(iins.operands[0])
+                except ValueError:
+                    pass
+        sliced_bytes: dict = {}
+        full_use: set = set()
+        for iins in inner:
+            if iins.opcode in ("dynamic-slice", "slice", "gather"):
+                src = iins.operands[0] if iins.operands else None
+                if src in param_of:
+                    idx = param_of[src]
+                    sliced_bytes[idx] = sliced_bytes.get(idx, 0) + iins.result_bytes
+                    continue
+            for opnd in iins.operands:
+                if opnd in param_of:
+                    full_use.add(param_of[opnd])
+        total = 0
+        for i, opnd in enumerate(ins.operands):
+            src = symtab.get(opnd)
+            if src is None:
+                continue
+            if i in sliced_bytes and i not in full_use:
+                total += min(sliced_bytes[i], src.result_bytes)
+            else:
+                total += src.result_bytes
+        return total
+
+    def _instr_cost(self, ins: Instr, symtab: dict, *, count_bytes: bool) -> Cost:
+        c = Cost()
+        op = ins.opcode
+        if op in _FREE:
+            return c
+        if op == "while":
+            trips = 1
+            m = _TRIP_RE.search(ins.attrs)
+            if m:
+                trips = int(m.group(1))
+            else:
+                c.unknown_loops += 1
+            body = _CALL_ATTR_RE.search(ins.attrs)
+            cond = _COND_ATTR_RE.search(ins.attrs)
+            if body:
+                c.add(self._comp_cost(body.group(1), count_bytes=count_bytes), trips)
+            if cond:
+                c.add(self._comp_cost(cond.group(1), count_bytes=count_bytes), trips)
+            return c
+        if op in ("call", "conditional", "async-start"):
+            m = _CALL_ATTR_RE.search(ins.attrs)
+            if m:
+                c.add(self._comp_cost(m.group(1), count_bytes=count_bytes))
+            return c
+        base = op.replace("-start", "")
+        if base in COLLECTIVES and not op.endswith("-done"):
+            ob = self._operand_bytes(ins, symtab)
+            c.coll[base] += ob
+            c.coll_count += 1
+            if count_bytes:
+                c.bytes += ob + ins.result_bytes
+            return c
+        if op.endswith("-done"):
+            return c
+        if op == "fusion":
+            m = _CALL_ATTR_RE.search(ins.attrs)
+            inner_name = m.group(1) if m else None
+            if inner_name:
+                inner = self._comp_cost(inner_name, count_bytes=False)
+                c.flops += inner.flops
+            if count_bytes:
+                c.bytes += (self._fusion_operand_bytes(ins, symtab, inner_name)
+                            + ins.result_bytes)
+            return c
+        if op == "dot":
+            k_elems = 1
+            m = _CONTRACT_RE.search(ins.attrs)
+            lhs = symtab.get(ins.operands[0]) if ins.operands else None
+            if m and lhs is not None:
+                lhs_dims = []
+                sm = _SHAPE_RE.search(lhs.result_type)
+                if sm and sm.group(2):
+                    lhs_dims = [int(d) for d in sm.group(2).split(",")]
+                for d in (m.group(1).split(",") if m.group(1) else []):
+                    di = int(d)
+                    if di < len(lhs_dims):
+                        k_elems *= lhs_dims[di]
+            c.flops += 2.0 * ins.result_elems * k_elems
+            if count_bytes:
+                c.bytes += self._operand_bytes(ins, symtab) + ins.result_bytes
+            return c
+        if op in ("convolution",):
+            # not used by this code base; fall back to result-sized cost
+            c.flops += 2.0 * ins.result_elems
+            if count_bytes:
+                c.bytes += self._operand_bytes(ins, symtab) + ins.result_bytes
+            return c
+        if op in ("slice", "dynamic-slice", "gather"):
+            # output-driven reads: only the sliced/gathered region moves
+            if count_bytes:
+                c.bytes += 2 * ins.result_bytes
+            return c
+        if op == "dynamic-update-slice":
+            # in-place (aliased) update: read+write the update region only
+            upd = symtab.get(ins.operands[1]) if len(ins.operands) > 1 else None
+            if count_bytes and upd is not None:
+                c.bytes += 2 * upd.result_bytes
+            return c
+        if op == "scatter":
+            upd = symtab.get(ins.operands[-1]) if ins.operands else None
+            ub = upd.result_bytes if upd else ins.result_bytes
+            c.flops += upd.result_elems if upd else 0
+            if count_bytes:
+                c.bytes += 3 * ub  # read dst region + read updates + write
+            return c
+        if op in ("copy", "copy-start", "transpose", "reshape", "broadcast",
+                  "iota", "concatenate", "pad", "reverse", "sort",
+                  "rng-bit-generator", "custom-call", "reduce",
+                  "reduce-window", "select-and-scatter", "map"):
+            if op in ("reduce", "reduce-window", "map", "sort"):
+                # one flop per input element is the usual convention
+                c.flops += sum(symtab[o].result_elems for o in ins.operands
+                               if o in symtab)
+            if count_bytes:
+                c.bytes += self._operand_bytes(ins, symtab) + ins.result_bytes
+            return c
+        # generic elementwise (add/multiply/exp/...)
+        c.flops += ins.result_elems
+        if count_bytes:
+            c.bytes += self._operand_bytes(ins, symtab) + ins.result_bytes
+        return c
+
+
+def loop_breakdown(hlo_text: str, top: int = 12) -> list:
+    """Per-while-loop and top-collective attribution (for §Perf).
+
+    Returns rows: {'kind': 'loop'|'collective', 'name', 'trips'/'bytes',
+    'flops', 'bytes', 'coll_bytes', 'op_name' hint}.
+    """
+    mod = HloModuleCost(hlo_text)
+    rows = []
+
+    def walk(comp: str, mult: float):
+        for ins in mod.computations.get(comp, []):
+            if ins.opcode == "while":
+                m = _TRIP_RE.search(ins.attrs)
+                trips = int(m.group(1)) if m else 1
+                body = _CALL_ATTR_RE.search(ins.attrs)
+                if body:
+                    c = mod._comp_cost(body.group(1), count_bytes=True)
+                    hint = ""
+                    hm = re.search(r'op_name="([^"]+)"', ins.attrs)
+                    if hm:
+                        hint = hm.group(1)
+                    rows.append({
+                        "kind": "loop", "name": ins.name, "trips": trips,
+                        "mult": mult, "flops": mult * trips * c.flops,
+                        "bytes": mult * trips * c.bytes,
+                        "coll_bytes": mult * trips * c.coll_bytes,
+                        "op_name": hint,
+                    })
+                    walk(body.group(1), mult * trips)
+            base = ins.opcode.replace("-start", "")
+            if base in COLLECTIVES and not ins.opcode.endswith("-done"):
+                symtab = {i.name: i for i in mod.computations[comp]}
+                ob = sum(symtab[o].result_bytes for o in ins.operands
+                         if o in symtab)
+                hint = ""
+                hm = re.search(r'op_name="([^"]+)"', ins.attrs)
+                if hm:
+                    hint = hm.group(1)
+                rows.append({
+                    "kind": base, "name": ins.name, "mult": mult,
+                    "coll_bytes": mult * ob, "bytes_one": ob, "op_name": hint,
+                })
+
+    walk(mod.entry, 1.0)
+    colls = sorted((r for r in rows if r["kind"] != "loop"),
+                   key=lambda r: -r["coll_bytes"])[:top]
+    loops = [r for r in rows if r["kind"] == "loop"]
+    return loops + colls
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    """Convenience wrapper -> plain dict."""
+    cost = HloModuleCost(hlo_text).cost()
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "coll_bytes": cost.coll_bytes,
+        "coll_breakdown": {k: v for k, v in cost.coll.items() if v},
+        "coll_count": cost.coll_count,
+        "unknown_trip_loops": cost.unknown_loops,
+    }

@@ -1,0 +1,28 @@
+"""granite-moe-3b-a800m — MoE 40 experts top-8, per-expert d_ff=512.
+[hf:ibm-granite granite-3.0-3b-a800m; hf]
+
+The assignment header says 40e (matching granite-3.0-3b-a800m); its bracket
+cites the 1b-a400m card (32e). We implement 40 experts; EP over a 16-way
+model axis pads the expert dim to 48 with zero-routed pad experts
+(see DESIGN.md §4).
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    num_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=49155,
+    n_experts=40,
+    top_k=8,
+    expert_d_ff=512,
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    skip_shapes=("long_500k",),
+    notes="full attention => long_500k skipped per assignment",
+))

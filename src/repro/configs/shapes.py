@@ -1,0 +1,67 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins (no allocation).
+
+LM transformer shapes are seq_len x global_batch.  ``decode_*`` / ``long_*``
+lower ``serve_step`` (one new token against a KV cache of seq_len), NOT
+``train_step``; ``train_*`` lowers the training step; ``prefill_*`` lowers
+the prefill step.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, Shape] = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+
+def input_specs(cfg: ArchConfig, shape: Shape) -> dict[str, jax.ShapeDtypeStruct]:
+    """Data-input stand-ins for one (arch x shape) cell.
+
+    Parameter and KV-cache stand-ins come from ``jax.eval_shape`` over the
+    model's ``init`` / ``init_cache`` (see launch/dryrun.py) so they always
+    match the real pytrees.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.input_kind == "embeds":  # modality-frontend stub (audio/vlm)
+            return {
+                "inputs": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        return {
+            "inputs": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    if shape.kind == "prefill":
+        if cfg.input_kind == "embeds":
+            return {"inputs": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)}
+        return {"inputs": jax.ShapeDtypeStruct((b, s), i32)}
+    if shape.kind == "decode":
+        return {
+            "tokens": jax.ShapeDtypeStruct((b,), i32),
+            "positions": jax.ShapeDtypeStruct((b,), i32),
+        }
+    raise ValueError(shape.kind)
+
+
+def runnable_cells(cfg: ArchConfig) -> list[Shape]:
+    """Shapes this arch runs; mandated skips documented in cfg.skip_shapes."""
+    return [s for s in SHAPES.values() if s.name not in cfg.skip_shapes]

@@ -1,0 +1,26 @@
+"""TAPAS core: thermal- and power-aware scheduling for LLM inference.
+
+The paper's primary contribution — placement (allocator), routing (router),
+instance configuration (configurator) over the §2 thermal/power models —
+plus the discrete-time cluster simulator, failure drills and
+oversubscription planner used by §5.
+"""
+from repro.core.allocator import (AllocatorState, BaselineAllocator,
+                                  TapasAllocator)
+from repro.core.configurator import InstanceConfigurator
+from repro.core.datacenter import (Datacenter, DCConfig, HWProfile,
+                                   scale_datacenter)
+from repro.core.power import PowerModel, row_power
+from repro.core.router import BaselineRouter, TapasRouter
+from repro.core.simulator import (BASELINE, TAPAS, ClusterSim, FailureEvent,
+                                  Policy, SimConfig, SimResult, run_policy)
+from repro.core.thermal import ThermalModel, outside_temperature
+
+__all__ = [
+    "AllocatorState", "BaselineAllocator", "TapasAllocator",
+    "InstanceConfigurator", "Datacenter", "DCConfig", "HWProfile",
+    "scale_datacenter", "PowerModel", "row_power", "BaselineRouter",
+    "TapasRouter", "BASELINE", "TAPAS", "ClusterSim", "FailureEvent",
+    "Policy", "SimConfig", "SimResult", "run_policy", "ThermalModel",
+    "outside_temperature",
+]

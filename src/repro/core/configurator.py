@@ -1,0 +1,71 @@
+"""Instance Configurator — paper §4.3 / §4.5.
+
+Per SaaS VM, pick the config point (freq, TP, batch, size, quant) that
+maximizes goodput under the server's current power/temperature caps while
+holding quality; reload-requiring moves (TP/size/quant) are last-resort and
+pause the instance for the reload duration (requests are steered away
+during transitions).  In emergencies a per-endpoint quality budget lets a
+bounded fraction of load go to smaller/quantized variants (§5.4: TAPAS
+takes up to −12% quality instead of capping performance).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core import profiles as P
+
+
+@dataclass
+class VMConfigState:
+    current: P.ConfigPoint = P.NOMINAL
+    pause_ticks: int = 0      # draining during reload
+
+    @property
+    def entry(self) -> P.ProfileEntry:
+        return P._entry(self.current)
+
+
+class InstanceConfigurator:
+    def __init__(self, *, tick_s: float = 300.0,
+                 quality_floor: float = 1.0,
+                 emergency_quality_floor: float = 0.85):
+        self.entries = P.build_profile()
+        self.tick_s = tick_s
+        self.quality_floor = quality_floor
+        self.emergency_floor = emergency_quality_floor
+        self.state: dict[int, VMConfigState] = {}
+
+    def get(self, vm_id: int) -> VMConfigState:
+        return self.state.setdefault(vm_id, VMConfigState())
+
+    def tick(self) -> None:
+        for st in self.state.values():
+            if st.pause_ticks > 0:
+                st.pause_ticks -= 1
+
+    def decide(self, vm_id: int, *, power_cap: float, temp_cap: float,
+               emergency: bool = False,
+               min_goodput: float = 0.0) -> VMConfigState:
+        """Update the VM's config for the new caps (fractions of nominal)."""
+        st = self.get(vm_id)
+        floor = self.emergency_floor if emergency else self.quality_floor
+        choice = P.best_config(self.entries, power_cap=power_cap,
+                               temp_cap=temp_cap, min_quality=floor,
+                               current=st.current,
+                               min_goodput=min_goodput if emergency else 0.0)
+        if choice is None and emergency:
+            # deepest emergency: any quality, minimum power point
+            feas = [e for e in self.entries
+                    if e.power <= power_cap and e.temp <= temp_cap]
+            choice = max(feas, key=lambda e: e.goodput) if feas else None
+        if choice is None:
+            return st  # nothing fits: capping layer will handle it
+        if choice.cfg != st.current:
+            if choice.cfg.needs_reload_from(st.current):
+                st.pause_ticks = max(
+                    1, int(round(choice.cfg.reload_cost_s / self.tick_s)))
+            st.current = choice.cfg
+        return st
+
+    def reset(self, vm_id: int) -> None:
+        self.state.pop(vm_id, None)

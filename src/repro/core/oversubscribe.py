@@ -1,0 +1,63 @@
+"""Oversubscription analysis — paper §5.3 (Fig. 21).
+
+Add racks into existing rows without growing the provisioned cooling/power
+envelopes; measure the fraction of time under thermal/power capping per
+policy.  The paper's claim: Baseline degrades past ~20% oversubscription
+while TAPAS holds capping below 0.7% of time at up to 40% more servers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.datacenter import DCConfig, scale_datacenter
+from repro.core.simulator import ClusterSim, Policy, SimConfig
+
+
+@dataclass
+class OversubPoint:
+    ratio: float
+    policy: str
+    thermal_capped_frac: float
+    power_capped_frac: float
+    unserved_frac: float
+
+    def row(self) -> dict:
+        return {
+            "oversub": self.ratio, "policy": self.policy,
+            "thermal_capped_pct": round(100 * self.thermal_capped_frac, 3),
+            "power_capped_pct": round(100 * self.power_capped_frac, 3),
+            "unserved_pct": round(100 * self.unserved_frac, 2),
+        }
+
+
+def sweep(policies: list, ratios=(0.0, 0.1, 0.2, 0.3, 0.4, 0.5), *,
+          dc: DCConfig | None = None, horizon_h: float = 24.0,
+          seed: int = 0) -> list:
+    dc = dc or DCConfig(n_rows=8, racks_per_row=10, servers_per_rack=4)
+    out = []
+    for ratio in ratios:
+        scaled = scale_datacenter(dc, ratio)
+        for pol in policies:
+            res = ClusterSim(SimConfig(dc=scaled, horizon_h=horizon_h,
+                                       seed=seed, policy=pol)).run()
+            out.append(OversubPoint(
+                ratio=ratio, policy=pol.name,
+                thermal_capped_frac=res.thermal_capped_frac,
+                power_capped_frac=res.power_capped_frac,
+                unserved_frac=res.unserved_frac).row())
+    return out
+
+
+def max_safe_oversubscription(rows: list, policy: str, *,
+                              cap_budget: float = 0.007) -> float:
+    """Largest ratio where (thermal+power) capping stays under the budget."""
+    best = 0.0
+    for r in rows:
+        if r["policy"] != policy:
+            continue
+        capped = (r["thermal_capped_pct"] + r["power_capped_pct"]) / 100.0
+        if capped <= cap_budget:
+            best = max(best, r["oversub"])
+    return best

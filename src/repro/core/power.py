@@ -1,0 +1,79 @@
+"""Power models — paper §2.2, Eq. (4) — vectorized JAX.
+
+Server power is a polynomial in chip utilization (idle draw is significant;
+fans/CPU/memory follow load — §2.2), aggregated to rows against the
+provisioned row envelope.  Capping scales chip frequency (=> util) down
+until the row fits, mirroring hardware power capping.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.datacenter import Datacenter
+
+
+@dataclass
+class PowerModel:
+    idle_w: jnp.ndarray        # (S,)
+    dyn_w: jnp.ndarray         # (S,) peak-idle
+    quad_frac: jnp.ndarray     # (S,) fraction of dynamic power that is ~util^2
+    fan_w: jnp.ndarray         # (S,) fan power at full airflow
+
+    @staticmethod
+    def calibrate(dc: Datacenter) -> "PowerModel":
+        cfg = dc.cfg
+        rng = np.random.default_rng(cfg.seed + 2)
+        s = dc.n_servers
+        idle = cfg.hw.idle_power_w * rng.uniform(0.95, 1.05, s)
+        fan = 0.06 * cfg.hw.peak_power_w * np.ones(s)
+        dyn = (cfg.hw.peak_power_w - idle - fan) * rng.uniform(0.97, 1.03, s)
+        quad = rng.uniform(0.3, 0.45, s)
+        return PowerModel(jnp.asarray(idle), jnp.asarray(dyn),
+                          jnp.asarray(quad), jnp.asarray(fan))
+
+    def server_power(self, chip_util):
+        """chip_util: (S, 8) in [0,1] -> watts (S,). Polynomial f_power."""
+        u = jnp.mean(chip_util, axis=1)
+        dyn = self.dyn_w * ((1 - self.quad_frac) * u + self.quad_frac * u * u)
+        return self.idle_w + dyn + self.fan_w * u
+
+    def max_util_for_power(self, budget_w):
+        """Invert server_power: mean-util cap under a per-server budget."""
+        a = self.quad_frac * self.dyn_w
+        b = (1 - self.quad_frac) * self.dyn_w + self.fan_w
+        c = self.idle_w - jnp.asarray(budget_w)
+        disc = jnp.maximum(b * b - 4 * a * c, 0.0)
+        u = (-b + jnp.sqrt(disc)) / (2 * a)
+        return jnp.clip(u, 0.0, 1.0)
+
+
+def row_power(dc: Datacenter, power_s) -> jnp.ndarray:
+    """Eq. 4 LHS: per-row aggregate watts."""
+    row = jax.nn.one_hot(jnp.asarray(dc.row_of), dc.n_rows, dtype=jnp.float32)
+    return jnp.asarray(power_s) @ row
+
+
+def capping_factors(dc: Datacenter, power_s, limits_w, pm: PowerModel,
+                    *, iaas_only_mask=None):
+    """Rows over budget -> per-server frequency (util) scale factors.
+
+    Baseline semantics (§5.4): uniform scaling across the row's servers
+    (optionally restricted to a mask, e.g. IaaS-only last-resort capping).
+    Returns (S,) multiplicative util factors in (0, 1]."""
+    p_row = row_power(dc, power_s)
+    limits = jnp.asarray(limits_w)
+    over = jnp.clip(p_row / jnp.maximum(limits, 1.0), 1.0, None)  # (R,)
+    # dynamic power is roughly linear in util at high load: cut utilization
+    # by the row overshoot applied to the dynamic fraction
+    p_srv = jnp.asarray(power_s)
+    dyn_frac = jnp.clip((p_srv - pm.idle_w) / jnp.maximum(p_srv, 1.0), 0.05, 1.0)
+    row_over = over[jnp.asarray(dc.row_of)]
+    needed_cut = (row_over - 1.0) / row_over  # fraction of row power to shed
+    cut = needed_cut / dyn_frac
+    if iaas_only_mask is not None:
+        cut = jnp.where(jnp.asarray(iaas_only_mask), cut, 0.0)
+    return jnp.clip(1.0 - cut, 0.05, 1.0)

@@ -1,0 +1,140 @@
+"""LLM instance profiles + Pareto frontier (paper §3.3, Figs. 15–16).
+
+The offline profiling phase measures goodput / power / peak-temperature /
+quality for every configuration point (GPU frequency, tensor parallelism,
+batch size, model size, quantization).  On real hardware this comes from
+running the serving engine; here the canonical profile is calibrated to the
+paper's published curves, and bench_profiles.py cross-checks the *relative*
+shape against our engine on reduced-size models.
+
+Conventions: goodput normalized to the best config = 1.0; power/temp
+normalized to server TDP / temp-at-TDP = 1.0; quality in [0,1]
+(Llama2-70B=1.0; 7B is 30–40% lower — paper §3.3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from itertools import product
+
+FREQS = (0.6, 0.7, 0.8, 0.9, 1.0)
+TPS = (2, 4, 8)
+BATCHES = (1, 16, 64)
+SIZES = ("70b", "13b", "7b")
+QUANTS = ("bf16", "int8")
+
+_SIZE = {  # speedup vs 70B, quality, compute intensity
+    "70b": (1.0, 1.00, 1.00),
+    "13b": (3.6, 0.85, 0.55),
+    "7b": (6.0, 0.62, 0.40),
+}
+_QUANT = {  # speedup, quality delta, power scale
+    "bf16": (1.0, 0.0, 1.0),
+    "int8": (1.45, -0.08, 0.82),
+}
+
+
+@dataclass(frozen=True)
+class ConfigPoint:
+    freq: float
+    tp: int
+    batch: int
+    size: str
+    quant: str
+
+    @property
+    def reload_cost_s(self) -> float:
+        """§4.3: freq is instant; batch is cheap; TP/size/quant reload."""
+        return 0.0 if self.tp == 8 and self.size == "70b" and \
+            self.quant == "bf16" else 8.0
+
+    def needs_reload_from(self, other: "ConfigPoint") -> bool:
+        return (self.tp, self.size, self.quant) != \
+            (other.tp, other.size, other.quant)
+
+
+@dataclass(frozen=True)
+class ProfileEntry:
+    cfg: ConfigPoint
+    goodput: float     # tokens/s, normalized
+    power: float       # fraction of server TDP
+    temp: float        # hottest-chip util-equivalent in [0,1]
+    quality: float
+
+
+def _entry(c: ConfigPoint) -> ProfileEntry:
+    size_speed, qual, intensity = _SIZE[c.size]
+    qspeed, qqual, qpow = _QUANT[c.quant]
+    # goodput: prompt phase ~ freq-sensitive (paper: prefill more sensitive);
+    # batching amortizes weights until SLO pressure at 64
+    batch_eff = {1: 0.25, 16: 0.85, 64: 1.0}[c.batch]
+    tp_eff = {8: 1.0, 4: 0.80, 2: 0.55}[c.tp]
+    goodput = (c.freq ** 0.85) * batch_eff * tp_eff * size_speed * qspeed
+    # power: fewer active chips with lower TP lowers SERVER power; per-chip
+    # power rises (work concentrates) -> temp of hottest chip up (paper §3.3)
+    util = intensity * batch_eff
+    chips_frac = c.tp / 8.0
+    per_chip = util * (0.55 + 0.45 * c.freq ** 2.2) / chips_frac ** 0.35
+    power = chips_frac * per_chip * qpow
+    temp = min(per_chip * qpow, 1.35)
+    quality = max(qual + qqual, 0.0)
+    return ProfileEntry(c, goodput=goodput, power=min(power, 1.0),
+                        temp=temp, quality=quality)
+
+
+def build_profile() -> list:
+    """All config points (Fig. 16 scatter)."""
+    out = []
+    for f, tp, b, s, q in product(FREQS, TPS, BATCHES, SIZES, QUANTS):
+        out.append(_entry(ConfigPoint(f, tp, b, s, q)))
+    return out
+
+
+def pareto_frontier(entries: list) -> list:
+    """Configs not dominated in (goodput up, power down, temp down,
+    quality up)."""
+    front = []
+    for e in entries:
+        dominated = any(
+            (o.goodput >= e.goodput and o.power <= e.power
+             and o.temp <= e.temp and o.quality >= e.quality
+             and (o.goodput, -o.power, -o.temp, o.quality)
+             != (e.goodput, -e.power, -e.temp, e.quality))
+            for o in entries)
+        if not dominated:
+            front.append(e)
+    return front
+
+
+def best_config(entries: list, *, power_cap: float, temp_cap: float,
+                min_quality: float, current: ConfigPoint | None = None,
+                allow_reload: bool = True,
+                min_goodput: float = 0.0) -> ProfileEntry | None:
+    """§4.3 Instance Configurator: maximize goodput under caps.
+
+    Reload-requiring moves (TP/size/quant) are last-resort: a candidate that
+    needs a reload is only chosen when no no-reload candidate both fits the
+    caps and sustains ``min_goodput`` (the instance's assigned load) — this
+    is how emergencies push load onto smaller/quantized variants (quality
+    cost) instead of dropping throughput (paper §5.4)."""
+    feasible = [e for e in entries
+                if e.power <= power_cap + 1e-9 and e.temp <= temp_cap + 1e-9
+                and e.quality >= min_quality - 1e-9]
+    if not feasible:
+        return None
+    if current is not None:
+        no_reload = [e for e in feasible
+                     if not e.cfg.needs_reload_from(current)]
+        sustaining = [e for e in no_reload if e.goodput >= min_goodput - 1e-9]
+        if sustaining:
+            return max(sustaining, key=lambda e: (e.goodput, e.quality))
+        if no_reload and not allow_reload:
+            return max(no_reload, key=lambda e: (e.goodput, e.quality))
+        if not allow_reload:
+            return None
+        if no_reload and max(e.goodput for e in feasible) <= max(
+                e.goodput for e in no_reload) + 1e-9:
+            return max(no_reload, key=lambda e: (e.goodput, e.quality))
+    return max(feasible, key=lambda e: (e.goodput, e.quality))
+
+
+NOMINAL = ConfigPoint(freq=1.0, tp=8, batch=64, size="70b", quant="bf16")

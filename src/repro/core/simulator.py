@@ -1,0 +1,407 @@
+"""Discrete-time cluster simulator — paper §5.1.
+
+Replays IaaS power traces and SaaS LLM-inference load over the datacenter
+of §2, evaluating placement/routing/configuration policies under the
+thermal (Eqs. 1–3) and power (Eq. 4) models; tracks throttling/capping
+events and their performance/quality impact.
+
+The physics (thermal/power models) run as vectorized JAX over all servers;
+policy logic is event-level Python/NumPy, mirroring the control plane.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import profiles as P
+from repro.core.allocator import (AllocatorState, BaselineAllocator,
+                                  TapasAllocator)
+from repro.core.configurator import InstanceConfigurator
+from repro.core.datacenter import Datacenter, DCConfig
+from repro.core.power import PowerModel, capping_factors
+from repro.core.router import BaselineRouter, TapasRouter
+from repro.core.thermal import ThermalModel, outside_temperature
+from repro.core.traces import (Workload, endpoint_load, generate_workload,
+                               iaas_util)
+
+
+@dataclass(frozen=True)
+class Policy:
+    place: bool = False
+    route: bool = False
+    config: bool = False
+
+    @property
+    def name(self) -> str:
+        if not (self.place or self.route or self.config):
+            return "baseline"
+        parts = [n for n, on in (("place", self.place), ("route", self.route),
+                                 ("config", self.config)) if on]
+        return "+".join(parts)
+
+
+BASELINE = Policy()
+TAPAS = Policy(place=True, route=True, config=True)
+
+
+@dataclass
+class FailureEvent:
+    kind: str       # "ahu" | "ups" | "cooling"
+    start_h: float
+    end_h: float
+    target: int = 0  # aisle id (ahu) / row-block id (ups)
+
+
+@dataclass
+class SimConfig:
+    dc: DCConfig = field(default_factory=DCConfig)
+    horizon_h: float = 24.0
+    tick_min: float = 5.0
+    saas_fraction: float = 0.5
+    seed: int = 0
+    policy: Policy = BASELINE
+    failures: tuple = ()
+    occupancy: float = 0.88
+    demand_scale: float = 0.85   # endpoint demand vs fleet capacity
+
+
+@dataclass
+class SimResult:
+    time_h: np.ndarray
+    max_gpu_temp: np.ndarray         # (T,)
+    peak_row_power_frac: np.ndarray  # (T,) hottest row / provisioned
+    thermal_events: int
+    power_events: int
+    thermal_capped_frac: float       # fraction of server-ticks throttled
+    power_capped_frac: float
+    unserved_frac: float             # SaaS demand that queued (SLO proxy)
+    mean_quality: float              # load-weighted SaaS quality
+    iaas_perf_impact: float          # mean freq-cap depth x affected frac
+    saas_perf_impact: float
+    row_power_frac: np.ndarray       # (T, R)
+
+    def summary(self) -> dict:
+        return {
+            "max_temp_c": float(self.max_gpu_temp.max()),
+            "p99_temp_c": float(np.quantile(self.max_gpu_temp, 0.99)),
+            "peak_row_power_frac": float(self.peak_row_power_frac.max()),
+            "thermal_events": self.thermal_events,
+            "power_events": self.power_events,
+            "thermal_capped_frac": self.thermal_capped_frac,
+            "power_capped_frac": self.power_capped_frac,
+            "unserved_frac": self.unserved_frac,
+            "mean_quality": self.mean_quality,
+            "iaas_perf_impact": self.iaas_perf_impact,
+            "saas_perf_impact": self.saas_perf_impact,
+        }
+
+
+class ClusterSim:
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self.dc = Datacenter(cfg.dc)
+        self.thermal = ThermalModel.calibrate(self.dc)
+        self.power = PowerModel.calibrate(self.dc)
+        self.work = generate_workload(
+            n_servers=self.dc.n_servers, horizon_h=cfg.horizon_h,
+            seed=cfg.seed, saas_fraction=cfg.saas_fraction,
+            occupancy=cfg.occupancy)
+        self.alloc_state = AllocatorState.empty(self.dc, self.thermal,
+                                                self.power)
+        self.allocator = (TapasAllocator(seed=cfg.seed) if cfg.policy.place
+                          else BaselineAllocator(seed=cfg.seed))
+        self.router = (TapasRouter() if cfg.policy.route
+                       else BaselineRouter())
+        self.configurator = InstanceConfigurator(tick_s=cfg.tick_min * 60.0)
+        self.nominal = P._entry(P.NOMINAL)
+
+    # ------------------------------------------------------------------
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        dc, th, pm = self.dc, self.thermal, self.power
+        chips = dc.cfg.hw.chips
+        s = dc.n_servers
+        ticks = int(cfg.horizon_h * 60 / cfg.tick_min)
+        t_h = np.arange(ticks) * cfg.tick_min / 60.0
+        t_out = np.asarray(outside_temperature(cfg.dc.region, t_h,
+                                               seed=cfg.seed))
+
+        pending = sorted(self.work.vms, key=lambda v: v.arrival_h)
+        departures: list = []
+        ep_servers: dict[str, list] = {e: [] for e in self.work.endpoints}
+        server_ep: dict[int, str] = {}
+        freq_cap = np.ones(s)           # persistent power-cap state
+        last_util = np.zeros(s)         # previous-tick mean chip util
+        affinity: dict[str, np.ndarray] = {}
+
+        max_temp = np.zeros(ticks)
+        peak_row = np.zeros(ticks)
+        row_frac_t = np.zeros((ticks, dc.n_rows))
+        th_events = pw_events = 0
+        th_capped = pw_capped = 0
+        unserved_total = demand_total = 0.0
+        quality_acc = quality_w = 0.0
+        iaas_impact = saas_impact = 0.0
+
+        for ti in range(ticks):
+            now = t_h[ti]
+            # -- arrivals / departures ---------------------------------
+            while pending and pending[0].arrival_h <= now:
+                vm = pending.pop(0)
+                srv = self.allocator.place(self.alloc_state, vm, seed=cfg.seed)
+                if srv is not None:
+                    departures.append((vm.arrival_h + vm.lifetime_h, srv, vm))
+                    if vm.kind == "saas":
+                        ep_servers[vm.customer].append(srv)
+                        server_ep[srv] = vm.customer
+            for dep in [d for d in departures if d[0] <= now]:
+                _, srv, vm = dep
+                self.alloc_state.release(srv)
+                if vm.kind == "saas" and srv in server_ep:
+                    ep_servers[server_ep.pop(srv)].remove(srv)
+                self.configurator.reset(srv)
+                departures.remove(dep)
+
+            kind = self.alloc_state.kind_of
+            iaas_mask = kind == 1
+
+            # -- failure state -----------------------------------------
+            ahu_derate = np.ones(dc.n_aisles)
+            ups_derate = np.ones(dc.n_rows)
+            cooling_extra = 0.0
+            emergency = False
+            for f in cfg.failures:
+                if f.start_h <= now < f.end_h:
+                    emergency = True
+                    if f.kind == "ahu":
+                        n = dc.cfg.ahus_per_aisle
+                        ahu_derate[f.target] = (n - 1) / n
+                    elif f.kind == "ups":
+                        ups_derate[:] = 0.75                 # 4N/3 failover
+                    elif f.kind == "cooling":
+                        cooling_extra = 3.0
+                    elif f.kind == "thermal":
+                        # paper §5.4 thermal emergency: ~90% cooling capacity
+                        # (an AHU loss in one aisle + DC-level cooling strain)
+                        n = dc.cfg.ahus_per_aisle
+                        ahu_derate[f.target] = (n - 1) / n
+                        cooling_extra = 2.5
+            prov_air = dc.prov_ahu_cfm * ahu_derate
+            prov_pwr = dc.prov_row_power_w * ups_derate
+
+            # -- IaaS utilization --------------------------------------
+            util_srv = np.zeros(s)
+            for _, srv, vm in departures:
+                if vm.kind == "iaas" and self.alloc_state.vm_of[srv] == vm.vm_id:
+                    util_srv[srv] = iaas_util(vm, np.asarray([now]),
+                                              seed=cfg.seed)[0]
+
+            # -- capacity + risk for SaaS routing ----------------------
+            self.configurator.tick()
+            dc_load_prev = float(last_util.mean())
+            inlet_est = np.asarray(th.inlet_temp(
+                t_out[ti], dc_load_prev, cooling_derate=cooling_extra))
+            risk_srv = self._risk(inlet_est, freq_cap, prov_pwr, prov_air,
+                                  np.maximum(util_srv, last_util), kind)
+
+            # -- route endpoint demand ---------------------------------
+            # TAPAS routing sees Eq. 2-derived per-server load ceilings so
+            # energy-packing can never push a server past its thermal cap
+            u_max = np.asarray(th.max_util_for_temp(
+                inlet_est, th.gpu_limit - 3.0))
+            saas_load = np.zeros(s)
+            quality_srv = np.ones(s)
+            for ep, servers in ep_servers.items():
+                if not servers:
+                    continue
+                idx = np.asarray(servers)
+                demand = (endpoint_load(ep, np.asarray([now]),
+                                        seed=cfg.seed)[0]
+                          * len(servers) * cfg.demand_scale)
+                caps, quals = [], []
+                for srv in idx:
+                    st = self.configurator.get(srv)
+                    e = st.entry
+                    paused = st.pause_ticks > 0
+                    cap = (0.0 if paused else
+                           (e.goodput / self.nominal.goodput) * freq_cap[srv])
+                    if cfg.policy.route and cap > 0:
+                        busy_max = min(u_max[srv] / max(e.temp, 1e-6), 1.0)
+                        cap *= busy_max
+                    caps.append(cap)
+                    quals.append(e.quality)
+                caps = np.asarray(caps)
+                aff = affinity.get(ep)
+                if aff is None or len(aff) != len(idx):
+                    aff = np.zeros(len(idx))
+                dec = self.router.route(demand, caps, risk_srv[idx], aff)
+                saas_load[idx] = dec.load
+                quality_srv[idx] = np.asarray(quals)
+                affinity[ep] = dec.load.copy()
+                unserved_total += dec.unserved
+                demand_total += demand
+                quality_acc += float((dec.load * np.asarray(quals)).sum())
+                quality_w += float(dec.load.sum())
+
+            # -- instance configuration (TAPAS) ------------------------
+            if cfg.policy.config:
+                hot = risk_srv > 0.45
+                for srv in np.flatnonzero((kind == 2) & hot):
+                    margin = 1.0 - risk_srv[srv]
+                    self.configurator.decide(
+                        int(srv),
+                        power_cap=max(0.6, margin + 0.45),
+                        temp_cap=max(0.6, margin + 0.45),
+                        emergency=emergency,
+                        min_goodput=float(saas_load[srv])
+                        * self.nominal.goodput)
+                # restore drained servers once their risk clears
+                cool = risk_srv < 0.25
+                for srv in np.flatnonzero((kind == 2) & cool):
+                    st = self.configurator.state.get(int(srv))
+                    if st is not None and st.current != P.NOMINAL:
+                        self.configurator.decide(int(srv), power_cap=1.0,
+                                                 temp_cap=1.35)
+
+            # -- chip utilization --------------------------------------
+            chip_util = np.zeros((s, chips))
+            # IaaS: capped clocks scale both work done and draw
+            chip_util[iaas_mask] = (util_srv[iaas_mask]
+                                    * freq_cap[iaas_mask])[:, None]
+            for srv in np.flatnonzero(kind == 2):
+                st = self.configurator.get(int(srv))
+                e = st.entry
+                cap = (e.goodput / self.nominal.goodput) * freq_cap[srv]
+                busy = min(saas_load[srv] / max(cap, 1e-9), 1.0)
+                tp = e.cfg.tp
+                # e.temp is the per-active-chip utilization-equivalent of
+                # this config at full busy (work concentrates at low TP)
+                chip_util[srv, :tp] = min(busy * e.temp, 1.0)
+            chip_util = np.clip(chip_util, 0.0, 1.0)
+
+            # -- physics -----------------------------------------------
+            power_s = np.asarray(pm.server_power(chip_util))
+            power_s = np.where(kind > 0, power_s, 0.12 * dc.cfg.hw.idle_power_w)
+            p_row = dc.row_sum(power_s)
+            dc_load = float(power_s.sum()
+                            / (dc.cfg.hw.peak_power_w * s))
+            inlet = np.asarray(th.inlet_temp(t_out[ti], dc_load,
+                                             cooling_derate=cooling_extra))
+            t_gpu = np.array(th.gpu_temp(inlet, chip_util))
+            air = np.asarray(th.airflow(chip_util.mean(axis=1)))
+            air = np.where(kind > 0, air, th.airflow_idle * 0.5)
+            a_air = dc.aisle_sum(air)
+
+            # heat recirculation: aisles over provisioned airflow push inlet
+            recirc = np.maximum(a_air / np.maximum(prov_air, 1.0) - 1.0, 0.0)
+            t_gpu += (6.0 * recirc)[dc.aisle_of][:, None]
+
+            # -- throttling / capping ----------------------------------
+            hot_srv = (t_gpu.max(axis=1) >= dc.cfg.hw.gpu_temp_limit_c) & (kind > 0)
+            over_row = p_row > prov_pwr
+            # record the *demanded* (pre-throttle) peak — what the load asked
+            # for; hardware clamps the realized temperature at the limit
+            max_temp[ti] = (float(t_gpu[kind > 0].max())
+                            if (kind > 0).any() else 0.0)
+            th_events += int(hot_srv.sum())
+            pw_events += int(over_row.sum())
+            th_capped += int(hot_srv.sum())
+            pw_capped += int(((over_row[dc.row_of]) & (kind > 0)).sum())
+
+            # hardware thermal throttling clamps the hot server within the
+            # tick: cut util to the Eq. 2 inversion at the limit, redo physics
+            clamp = np.ones(s)
+            if hot_srv.any():
+                u_lim = np.asarray(th.max_util_for_temp(
+                    inlet, dc.cfg.hw.gpu_temp_limit_c))
+                cur = chip_util.max(axis=1)
+                clamp = np.where(hot_srv, np.minimum(
+                    u_lim / np.maximum(cur, 1e-6), 1.0), 1.0)
+                chip_util = chip_util * clamp[:, None]
+                power_s = np.asarray(pm.server_power(chip_util))
+                power_s = np.where(kind > 0, power_s,
+                                   0.12 * dc.cfg.hw.idle_power_w)
+                p_row = dc.row_sum(power_s)
+                t_gpu = np.array(th.gpu_temp(inlet, chip_util))
+                t_gpu += (6.0 * recirc)[dc.aisle_of][:, None]
+                # throttling costs served throughput on SaaS servers
+                loss = saas_load * (1.0 - clamp)
+                unserved_total += float(loss[kind == 2].sum())
+                saas_load = saas_load - loss
+
+            # power capping: baseline caps every server in the row uniformly;
+            # TAPAS caps IaaS only (SaaS was already reconfigured/steered)
+            mask = iaas_mask if cfg.policy.config else (kind > 0)
+            factors = np.asarray(capping_factors(
+                dc, power_s, prov_pwr, pm,
+                iaas_only_mask=mask))
+            new_cap = np.clip(freq_cap * factors, 0.3, 1.0)
+            freq_cap = np.where(factors < 1.0, new_cap,
+                                np.minimum(freq_cap * 1.1, 1.0))
+
+            # perf impact = power-cap depth + in-tick thermal-clamp depth
+            cap_depth = (1.0 - freq_cap) + (1.0 - clamp)
+            iaas_impact += float(cap_depth[iaas_mask].mean()) if iaas_mask.any() else 0.0
+            saas_mask = kind == 2
+            saas_impact += float(cap_depth[saas_mask].mean()) if saas_mask.any() else 0.0
+
+            rowf = p_row / np.maximum(dc.prov_row_power_w, 1.0)
+            row_frac_t[ti] = rowf
+            peak_row[ti] = float(rowf.max())
+            last_util = chip_util.mean(axis=1)
+
+        occupied_ticks = max(ticks * max((kind > 0).sum(), 1), 1)
+        return SimResult(
+            time_h=t_h,
+            max_gpu_temp=max_temp,
+            peak_row_power_frac=peak_row,
+            thermal_events=th_events,
+            power_events=pw_events,
+            thermal_capped_frac=th_capped / occupied_ticks,
+            power_capped_frac=pw_capped / occupied_ticks,
+            unserved_frac=unserved_total / max(demand_total, 1e-9),
+            mean_quality=quality_acc / max(quality_w, 1e-9),
+            iaas_perf_impact=iaas_impact / ticks,
+            saas_perf_impact=saas_impact / ticks,
+            row_power_frac=row_frac_t,
+        )
+
+    # ------------------------------------------------------------------
+    def _risk(self, inlet, freq_cap, prov_pwr, prov_air, iaas_util_now, kind):
+        """Per-server violation risk in [0,1] from Eqs. 1–4 forecasts."""
+        dc, th, pm = self.dc, self.thermal, self.power
+        s = dc.n_servers
+        chips = dc.cfg.hw.chips
+        # server-level: temperature forecast at moderately increased load
+        # (full-load forecasts mark nearly every warm server risky and
+        # starve routing; the paper routes on *violation risk*, not worst case)
+        probe = np.clip(iaas_util_now + 0.35, 0.0, 1.0)
+        t_probe = np.asarray(th.gpu_temp(
+            inlet, np.repeat(probe[:, None], chips, axis=1))).max(axis=1)
+        t_risk = 1.0 / (1.0 + np.exp(-(t_probe - th.gpu_limit) / 2.0))
+        # row-level: graded power risk — engages well before the envelope so
+        # packing prefers cold rows and hot rows shed SaaS load (§4.2 Row)
+        pwr = np.asarray(pm.server_power(
+            np.repeat(iaas_util_now[:, None], chips, axis=1)))
+        pwr = np.where(kind > 0, pwr, 0.0)
+        rowp = dc.row_sum(pwr)
+        row_frac = rowp / np.maximum(prov_pwr, 1.0)
+        # relative balancing: above-fleet-average rows repel load long before
+        # the envelope, plus a hard ramp approaching the limit itself
+        rel = np.clip((row_frac - row_frac.mean()) / 0.25, 0.0, 1.0)
+        near = np.clip((row_frac - 0.85) / 0.15, 0.0, 1.0)
+        p_risk = np.maximum(rel * 0.7, near)[dc.row_of]
+        # aisle airflow headroom
+        air = np.asarray(th.airflow(iaas_util_now))
+        a_air = dc.aisle_sum(np.where(kind > 0, air, 0.0))
+        n_per_aisle = dc.aisle_sum((kind > 0).astype(float))
+        a_head = (prov_air - a_air) / np.maximum(
+            n_per_aisle * th.airflow_max, 1.0)
+        a_risk = np.clip(0.8 - a_head, 0.0, 1.0)[dc.aisle_of]
+        return np.maximum.reduce([t_risk, p_risk, a_risk])
+
+
+def run_policy(policy: Policy, **kw) -> SimResult:
+    cfg = SimConfig(policy=policy, **kw)
+    return ClusterSim(cfg).run()

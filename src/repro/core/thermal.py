@@ -1,0 +1,123 @@
+"""Thermal models — paper §2.1, Eqs. (1)–(3) — vectorized JAX.
+
+Eq. 1  T_inlet[s] = f_s(T_outside, Load_DC): piecewise in outside temp
+       (flat >= 18 °C floor below 15 °C to limit humidity, linear 15–25 °C,
+       compressed above 25 °C when mechanical assist kicks in) plus a
+       load-dependent offset (Fig. 5: ~2 °C between idle and full DC load)
+       and static spatial offsets (rows up to ~1 °C, racks up to ~2 °C,
+       height minor — Fig. 4).
+
+Eq. 2  T_gpu[s,g] = T_inlet[s] + alpha[s,g] * util + beta[s,g]: linear
+       regression per chip (paper MAE < 1 °C), with per-chip heterogeneity
+       up to ~10 °C inside one server; even-indexed chips run cooler
+       (server layout, Fig. 8/9).
+
+Eq. 3  f_air(util): linear fan curve between idle and max CFM; the aisle
+       constraint is sum(f_air) <= ProvAHU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.datacenter import Datacenter
+
+REGION_OUTSIDE = {  # (mean °C, daily amplitude °C)
+    "hot": (28.0, 7.0),
+    "mild": (20.0, 7.0),
+    "cold": (10.0, 6.0),
+}
+
+
+@dataclass
+class ThermalModel:
+    """Per-server / per-chip regression coefficients (seeded 'calibration')."""
+    inlet_base: jnp.ndarray      # (S,) °C at the 18 °C floor
+    inlet_slope: jnp.ndarray     # (S,) °C per outside °C in [15, 25]
+    inlet_hot_slope: jnp.ndarray  # (S,) compressed slope above 25 °C
+    load_coeff: jnp.ndarray      # (S,) °C at full DC load (Fig. 5: ~2)
+    gpu_alpha: jnp.ndarray       # (S, 8) °C per unit chip util
+    gpu_beta: jnp.ndarray        # (S, 8) static offset
+    airflow_idle: float
+    airflow_max: float
+    gpu_limit: float
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def calibrate(dc: Datacenter) -> "ThermalModel":
+        cfg = dc.cfg
+        rng = np.random.default_rng(cfg.seed + 1)
+        s = dc.n_servers
+        # spatial heterogeneity (Fig. 4): row up to 1 °C, rack up to 2 °C,
+        # height within rack minor (0.3 °C); ends of some rows warmer
+        row_off = rng.uniform(0.0, 1.0, dc.n_rows)[dc.row_of]
+        rack_off = rng.uniform(0.0, 2.0, (dc.n_rows, cfg.racks_per_row))[
+            dc.row_of, dc.rack_of]
+        height_off = 0.3 * dc.height_of / max(cfg.servers_per_rack - 1, 1)
+        inlet_base = 18.0 + row_off + rack_off + height_off
+        inlet_slope = rng.uniform(0.75, 0.95, s)   # Fig. 3 regression band
+        hot_slope = inlet_slope * rng.uniform(0.45, 0.6, s)
+        load_coeff = rng.uniform(1.6, 2.4, s)      # Fig. 5: ~2 °C idle->full
+
+        # per-chip (Eq. 2): even-indexed chips cooler; process variation
+        # (Fig. 9: >20 °C spread across a DC, ~10 °C inside one server)
+        g = cfg.hw.chips
+        layout = np.where(np.arange(g) % 2 == 0, -3.0, 3.0)  # Fig. 9
+        proc = rng.normal(0.0, 2.5, (s, g))
+        # server-level component (heatsink/airflow lottery) is what makes
+        # placement matter; chip-level variation adds the Fig. 9 spread
+        server_off = rng.normal(0.0, 4.5, (s, 1))
+        gpu_alpha = (35.0 + server_off + rng.normal(0.0, 3.0, (s, g))
+                     + layout)  # °C @ util=1
+        gpu_beta = 6.0 + proc
+        return ThermalModel(
+            inlet_base=jnp.asarray(inlet_base),
+            inlet_slope=jnp.asarray(inlet_slope),
+            inlet_hot_slope=jnp.asarray(hot_slope),
+            load_coeff=jnp.asarray(load_coeff),
+            gpu_alpha=jnp.asarray(gpu_alpha),
+            gpu_beta=jnp.asarray(gpu_beta),
+            airflow_idle=cfg.hw.airflow_idle_cfm,
+            airflow_max=cfg.hw.airflow_max_cfm,
+            gpu_limit=cfg.hw.gpu_temp_limit_c,
+        )
+
+    # ------------------------------------------------------------------
+    def inlet_temp(self, t_outside, dc_load, *, cooling_derate: float = 0.0):
+        """Eq. 1. t_outside: scalar °C; dc_load: scalar in [0,1].
+
+        ``cooling_derate``: extra °C from a datacenter cooling-device
+        failure (§2.1 Failures / §5.4)."""
+        t = jnp.asarray(t_outside, jnp.float32)
+        warm = jnp.clip(t - 15.0, 0.0, 10.0) * self.inlet_slope
+        hot = jnp.clip(t - 25.0, 0.0, None) * self.inlet_hot_slope
+        return (self.inlet_base + warm + hot
+                + self.load_coeff * jnp.asarray(dc_load, jnp.float32)
+                + cooling_derate)
+
+    def gpu_temp(self, t_inlet, chip_util):
+        """Eq. 2. t_inlet: (S,); chip_util: (S, 8) in [0,1] -> (S, 8) °C."""
+        return t_inlet[:, None] + self.gpu_alpha * chip_util + self.gpu_beta
+
+    def airflow(self, server_util):
+        """Eq. 3 LHS. server_util: (S,) mean chip util -> CFM (S,)."""
+        return (self.airflow_idle
+                + (self.airflow_max - self.airflow_idle) * server_util)
+
+    def max_util_for_temp(self, t_inlet, t_limit):
+        """Invert Eq. 2: hottest-chip util cap to stay below t_limit."""
+        worst = jnp.max(self.gpu_alpha, axis=1)
+        worst_beta = jnp.max(self.gpu_beta, axis=1)
+        return jnp.clip((t_limit - t_inlet - worst_beta) / worst, 0.0, 1.0)
+
+
+def outside_temperature(region: str, t_hours, *, seed: int = 0):
+    """Diurnal outside temperature trace (°C) for t in hours."""
+    mean, amp = REGION_OUTSIDE[region]
+    t = jnp.asarray(t_hours, jnp.float32)
+    base = mean + amp * jnp.sin(2 * jnp.pi * (t - 9.0) / 24.0)
+    wob = 1.5 * jnp.sin(2 * jnp.pi * t / (24.0 * 6.3) + seed)
+    return base + wob

@@ -1,0 +1,124 @@
+"""Seeded production-like traces (paper §3, Figs. 12–14).
+
+- IaaS VMs: opaque, whole-server, diurnal utilization with customer
+  templates (predictable: row-level error <10% — Fig. 14) and long lifetimes
+  (>60% beyond two weeks — Fig. 12a).
+- SaaS endpoints: LLM inference services, 23–100 VMs each (Fig. 12b),
+  diurnal request load with sharper peaks.
+- VM arrivals: Poisson, 50/50 IaaS/SaaS by default (§5.1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class VMSpec:
+    vm_id: int
+    kind: str                  # "iaas" | "saas"
+    customer: str              # IaaS: customer template; SaaS: endpoint name
+    arrival_h: float
+    lifetime_h: float
+    peak_util: float           # predicted peak chip utilization
+
+
+@dataclass
+class Workload:
+    vms: list
+    endpoints: dict            # name -> list of SaaS vm_ids
+    horizon_h: float
+
+    def endpoint_of(self, vm_id: int) -> str | None:
+        for name, ids in self.endpoints.items():
+            if vm_id in ids:
+                return name
+        return None
+
+
+def _lifetime(rng) -> float:
+    """Fig. 12a: >60% of VMs live over two weeks."""
+    if rng.random() < 0.62:
+        return float(rng.uniform(14 * 24, 8 * 7 * 24))
+    return float(rng.lognormal(mean=3.3, sigma=1.2))  # hours, median ~27h
+
+
+def generate_workload(*, n_servers: int, horizon_h: float, seed: int = 0,
+                      saas_fraction: float = 0.5, occupancy: float = 0.92,
+                      n_endpoints: int = 10) -> Workload:
+    rng = np.random.default_rng(seed + 3)
+    n_vms = int(n_servers * occupancy)
+    n_saas = int(n_vms * saas_fraction)
+    n_iaas = n_vms - n_saas
+
+    vms: list[VMSpec] = []
+    # endpoint sizes 23..100 (Fig. 12b), scaled to the SaaS pool
+    sizes = rng.integers(23, 101, n_endpoints).astype(float)
+    sizes = np.maximum((sizes / sizes.sum() * n_saas).astype(int), 1)
+    endpoints: dict[str, list] = {}
+    vid = 0
+    for e in range(n_endpoints):
+        name = f"ep{e}"
+        endpoints[name] = []
+        for _ in range(int(sizes[e])):
+            # endpoints scale up over days; arrivals interleave with IaaS
+            vms.append(VMSpec(vid, "saas", name,
+                              arrival_h=float(rng.uniform(0, horizon_h * 0.25)),
+                              lifetime_h=horizon_h * 2,
+                              peak_util=1.0))
+            endpoints[name].append(vid)
+            vid += 1
+    for i in range(n_iaas):
+        cust = f"cust{rng.integers(0, 6)}"  # few big customers => sync'd rows
+        vms.append(VMSpec(vid, "iaas", cust,
+                          arrival_h=float(rng.uniform(0, horizon_h * 0.3)),
+                          lifetime_h=_lifetime(rng),
+                          peak_util=float(rng.uniform(0.55, 1.0))))
+        vid += 1
+    return Workload(vms=vms, endpoints=endpoints, horizon_h=horizon_h)
+
+
+# ---------------------------------------------------------------------------
+# load traces
+# ---------------------------------------------------------------------------
+
+_CUST_PHASE: dict[str, float] = {}
+
+
+def iaas_util(vm: VMSpec, t_h: np.ndarray, *, seed: int = 0) -> np.ndarray:
+    """Diurnal utilization trace in [0,1] for an IaaS VM (Fig. 13a)."""
+    key = (vm.customer, seed)  # cache keyed by seed: cross-run determinism
+    if key not in _CUST_PHASE:
+        rng = np.random.default_rng(abs(hash(key)) % 2**32)
+        _CUST_PHASE[key] = float(rng.uniform(0, 24))
+    phase = _CUST_PHASE[key]
+    rng = np.random.default_rng((vm.vm_id, seed))
+    base = 0.62 + 0.3 * np.sin(2 * np.pi * (t_h - phase) / 24.0)
+    noise = 0.08 * rng.standard_normal(np.shape(t_h))
+    burst = (rng.random(np.shape(t_h)) < 0.02) * rng.uniform(0.1, 0.3)
+    return np.clip(vm.peak_util * (base + noise + burst), 0.02, vm.peak_util)
+
+
+def endpoint_load(name: str, t_h: np.ndarray, *, seed: int = 0) -> np.ndarray:
+    """Aggregate request load for a SaaS endpoint, normalized to [0,1]
+    per-VM-equivalent units (1.0 == every VM fully busy)."""
+    rng = np.random.default_rng(abs(hash((name, seed))) % 2**32)
+    phase = rng.uniform(7, 11)  # business-hours peak
+    sharp = rng.uniform(1.2, 2.2)
+    base = 0.45 + 0.55 * np.maximum(
+        np.sin(2 * np.pi * (t_h - phase) / 24.0), 0.0) ** sharp
+    spikes = (rng.random(np.shape(t_h)) < 0.01) * rng.uniform(0.15, 0.35)
+    noise = 0.05 * np.random.default_rng((abs(hash(name)) % 997, seed)) \
+        .standard_normal(np.shape(t_h))
+    return np.clip(base + spikes + noise, 0.05, 1.0)
+
+
+def predict_peak_util(vm: VMSpec, *, history_h: float = 168.0,
+                      seed: int = 0, quantile: float = 0.99) -> float:
+    """Template-based peak prediction (paper §4.1/§4.5: previous-week P99;
+    under-prediction <4% of row-hours)."""
+    t = np.arange(0, history_h, 1.0)
+    if vm.kind == "iaas":
+        return float(np.quantile(iaas_util(vm, t, seed=seed), quantile))
+    return 1.0  # endpoints can always spike to full

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q: (B, H, S, D); k/v: (B, K, S, D)."""
+    B, H, S, D = q.shape
+    K = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    reps = H // K
+    k = jnp.repeat(k, reps, axis=1)
+    v = jnp.repeat(v, reps, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, positions, *, scale=None):
+    """q: (B, H, D); k/v: (B, S, K, D); positions: (B,)."""
+    B, H, D = q.shape
+    S, K = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    reps = H // K
+    k = jnp.repeat(k, reps, axis=2)  # (B, S, H, D)
+    v = jnp.repeat(v, reps, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(S)[None, None, :] <= positions[:, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv6_wkv_ref(r, k, v, w, u, s0):
+    """r/k/v/w: (B, T, H, D); u: (H, D); s0: (B, H, D, D)."""
+    def step(s, inp):
+        rt, kt, vt, wt = (t.astype(jnp.float32) for t in inp)  # (B, H, D)
+        at = kt[..., :, None] * vt[..., None, :]
+        bonus = (u[None].astype(jnp.float32) * kt)[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + bonus)
+        return wt[..., :, None] * s + at, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    s_f, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), s_f
+
+
+def int8_matmul_ref(x_q, w_q, sx, sw, out_dtype=jnp.bfloat16):
+    acc = jnp.einsum("mk,kn->mn", x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    return (acc.astype(jnp.float32) * sx * sw).astype(out_dtype)

@@ -1,0 +1,255 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent (sharding
+propagates, collectives legal, memory fits) and extracts the roofline
+inputs: ``compiled.cost_analysis()`` (FLOPs / bytes per partition),
+``compiled.memory_analysis()`` (per-device memory), and collective operand
+bytes parsed from the optimized HLO.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+Results are cached as JSON under benchmarks/results/dryrun/.
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.roofline import HW, model_flops, roofline_terms
+from repro.configs import ASSIGNED, SHAPES, get_config, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model, mesh_plan
+from repro.training.train_step import AdamWConfig, init_opt_state, make_train_step
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _peak_mem(mem_d: dict) -> float:
+    if not mem_d:
+        return 0.0
+    return float(mem_d.get("argument_size_in_bytes", 0)
+                 + mem_d.get("output_size_in_bytes", 0)
+                 + mem_d.get("temp_size_in_bytes", 0)
+                 - mem_d.get("alias_size_in_bytes", 0))
+
+
+def choose_grad_accum(cfg, shape, dp: int) -> int:
+    """Microbatch count so the rematted residual stack stays ~<= 4 GB/dev."""
+    b_loc = max(shape.global_batch // dp, 1)
+    stack = b_loc * shape.seq_len * cfg.d_model * 2 * cfg.num_layers  # bf16
+    accum = 1
+    while stack / accum > 4e9 and accum < b_loc:
+        accum *= 2
+    return accum
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               plan_overrides: dict | None = None):
+    """Build + lower one cell; returns (lowered, meta dict)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name in cfg.skip_shapes:
+        raise ValueError(f"{arch} skips {shape_name}: {cfg.notes}")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    is_train = shape.kind == "train"
+    kw = dict(
+        fsdp=is_train,
+        remat="full" if is_train else "none",
+        param_dtype=jnp.float32 if is_train else jnp.bfloat16,
+    )
+    overrides = dict(plan_overrides or {})
+    accum_override = overrides.pop("grad_accum", None)
+    kw.update(overrides)
+    plan = mesh_plan(mesh, **kw)
+    if shape.global_batch % max(plan.dp, 1):
+        # batch smaller than the data axis (e.g. long_500k B=1): replicate
+        # over data — honest for single-stream long-context decode
+        import dataclasses as _dc
+        plan = _dc.replace(plan, dp_axes=())
+    model = build_model(cfg, plan)
+    specs = input_specs(cfg, shape)
+    dp = plan.dp_axes
+
+    def dsh(ndim):
+        return NamedSharding(mesh, P(dp, *([None] * (ndim - 1))))
+
+    p_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shard = model.param_shardings()
+
+    if shape.kind == "train":
+        opt_struct = jax.eval_shape(init_opt_state, p_struct)
+        opt_shard = {"m": p_shard, "v": p_shard,
+                     "step": NamedSharding(mesh, P())}
+        accum = accum_override or choose_grad_accum(cfg, shape, plan.dp)
+        step = make_train_step(model, AdamWConfig(), grad_accum=accum)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, opt_shard,
+                          dsh(len(specs["inputs"].shape)),
+                          dsh(len(specs["labels"].shape))),
+            out_shardings=(p_shard, opt_shard, None),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(p_struct, opt_struct, specs["inputs"],
+                               specs["labels"])
+        tokens = shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        logits_sh = NamedSharding(mesh, P(dp, "model"))
+        jitted = jax.jit(
+            model.prefill,
+            in_shardings=(p_shard, dsh(len(specs["inputs"].shape))),
+            out_shardings=(logits_sh, model.cache_shardings()),
+        )
+        lowered = jitted.lower(p_struct, specs["inputs"])
+        tokens = shape.global_batch * shape.seq_len
+    else:  # decode
+        cache_struct = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        cache_sh = model.cache_shardings()
+        logits_sh = NamedSharding(mesh, P(dp, "model"))
+        jitted = jax.jit(
+            model.decode_step,
+            in_shardings=(p_shard, cache_sh, dsh(1), dsh(1)),
+            out_shardings=(logits_sh, cache_sh),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(p_struct, cache_struct, specs["tokens"],
+                               specs["positions"])
+        tokens = shape.global_batch  # one new token per sequence
+
+    meta = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "kind": shape.kind,
+        "tokens": tokens,
+        "n_params": cfg.param_count(),
+        "n_params_active": cfg.param_count(active=True),
+    }
+    if shape.kind == "train":
+        meta["grad_accum"] = accum
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             plan_overrides: dict | None = None, verbose: bool = True) -> dict:
+    t0 = time.time()
+    lowered, meta = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                               plan_overrides=plan_overrides)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = _mem_dict(compiled.memory_analysis())
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    mflops = model_flops(meta["n_params_active"], meta["kind"], meta["tokens"])
+    rep = roofline_terms(
+        arch=arch, shape=shape_name, mesh=meta["mesh"], chips=meta["chips"],
+        cost=cost, hlo_text=hlo, model_flops_total=mflops,
+        peak_mem=_peak_mem(mem))
+    row = rep.row()
+    row.update(meta)
+    row["memory_analysis"] = mem
+    row["xla_cost_analysis"] = {k: float(v) for k, v in cost.items()
+                                if k in ("flops", "bytes accessed")}
+    row["fits_hbm"] = bool(_peak_mem(mem) <= HW.hbm_bytes) if mem else None
+    row["t_lower_s"] = round(t_lower, 1)
+    row["t_compile_s"] = round(t_compile, 1)
+    row["_hlo_text"] = hlo  # popped before JSON; saved compressed alongside
+    if verbose:
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: flops/dev={row['hlo_flops_total']/meta['chips']:.3e} "
+              f"bytes/dev={cost.get('bytes accessed', 0):.3e}")
+        print(f"  collectives/dev: {row['coll_bytes_per_dev']:.3e} B "
+              f"{row['coll_breakdown']}")
+        print(f"  terms: compute={row['t_compute_s']:.4f}s "
+              f"memory={row['t_memory_s']:.4f}s "
+              f"collective={row['t_collective_s']:.4f}s "
+              f"-> {row['bottleneck']}-bound; "
+              f"roofline_fraction={row['roofline_fraction']:.3f}")
+    return row
+
+
+def cell_path(arch, shape, mesh_name, tag="") -> pathlib.Path:
+    suffix = f"_{tag}" if tag else ""
+    return RESULTS_DIR / f"{arch}_{shape}_{mesh_name}{suffix}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true", help="sweep every runnable cell")
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    ap.add_argument("--tag", default="", help="variant tag for perf experiments")
+    ap.add_argument("--plan", default="", help="JSON dict of ShardPlan overrides")
+    args = ap.parse_args()
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    overrides = json.loads(args.plan) if args.plan else None
+
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            if shape in cfg.skip_shapes:
+                print(f"[skip] {arch} x {shape}: {cfg.notes}")
+                continue
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                out = cell_path(arch, shape, mesh_name, args.tag)
+                if out.exists() and not args.force:
+                    print(f"[cached] {arch} x {shape} @ {mesh_name}")
+                    continue
+                print(f"[run] {arch} x {shape} @ {mesh_name}")
+                try:
+                    row = run_cell(arch, shape, multi_pod=mp,
+                                   plan_overrides=overrides)
+                    hlo = row.pop("_hlo_text", None)
+                    out.write_text(json.dumps(row, indent=1, default=str))
+                    if hlo:
+                        import zstandard
+                        out.with_suffix(".hlo.zst").write_bytes(
+                            zstandard.compress(hlo.encode()))
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mesh_name, repr(e)))
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall requested dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Elastic runtime: survive node loss by re-meshing + checkpoint restore.
+
+Policy (DESIGN.md §3): never break a TP group — shrink the data axis to the
+largest value that fits the surviving device count, rebuild shardings from
+the same logical axes, and restore the latest committed checkpoint with the
+new shardings (restore_checkpoint re-shards transparently).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+from repro.launch.mesh import make_mesh_for
+from repro.models import build_model, mesh_plan
+from repro.training.checkpoint import restore_checkpoint
+from repro.training.train_step import init_opt_state
+
+
+@dataclass
+class ElasticDecision:
+    survivors: int
+    data: int
+    model: int
+    dropped: int
+
+    @property
+    def usable(self) -> int:
+        return self.data * self.model
+
+
+def plan_remesh(n_surviving: int, *, tp: int = 16) -> ElasticDecision:
+    """Largest (data x tp) grid fitting the survivors; TP stays whole."""
+    while tp > 1 and n_surviving < tp:
+        tp //= 2
+    data = max(n_surviving // tp, 1)
+    used = data * tp
+    return ElasticDecision(survivors=n_surviving, data=data, model=tp,
+                           dropped=n_surviving - used)
+
+
+def recover(arch: str, ckpt_dir: str, n_surviving: int, *, fsdp: bool = True):
+    """Rebuild model + restore the latest checkpoint onto a shrunken mesh."""
+    decision = plan_remesh(min(n_surviving, len(jax.devices())))
+    mesh = make_mesh_for(decision.usable, want_model=decision.model)
+    plan = mesh_plan(mesh, fsdp=fsdp)
+    model = build_model(arch, plan)
+    params_t = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt_t = jax.eval_shape(init_opt_state, params_t)
+    shardings = (model.param_shardings(),
+                 {"m": model.param_shardings(), "v": model.param_shardings(),
+                  "step": None})
+    (params, opt_state), manifest = restore_checkpoint(
+        ckpt_dir, (params_t, opt_t), shardings=shardings)
+    return model, params, opt_state, manifest, decision

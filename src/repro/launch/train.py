@@ -1,0 +1,89 @@
+"""End-to-end training driver (example application of the substrate).
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama2-7b --smoke \
+        --steps 50 --ckpt /tmp/ckpt
+
+On this CPU container use --smoke (reduced config); on a pod the same
+driver runs the full config under make_production_mesh().
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model, local_plan, mesh_plan
+from repro.training.checkpoint import (latest_step, restore_checkpoint,
+                                       save_checkpoint)
+from repro.training.data import DataConfig, TokenPipeline
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import init_opt_state, make_train_step
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke_config()
+    if args.production_mesh:
+        from repro.launch.mesh import make_production_mesh
+        plan = mesh_plan(make_production_mesh(), fsdp=True, remat="full")
+    else:
+        plan = local_plan(param_dtype=jnp.float32)
+    model = build_model(cfg, plan)
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = init_opt_state(params)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=5, total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(model, opt_cfg,
+                                      grad_accum=args.grad_accum))
+    pipe = TokenPipeline(DataConfig(cfg.vocab_size, args.batch, args.seq))
+
+    start = 0
+    if args.ckpt and latest_step(args.ckpt) is not None:
+        (params, opt_state), manifest = restore_checkpoint(
+            args.ckpt, (params, opt_state))
+        start = manifest["step"]
+        pipe = TokenPipeline(DataConfig(cfg.vocab_size, args.batch, args.seq),
+                             step=start)
+        print(f"resumed from step {start}")
+
+    losses = []
+    for step in range(start, args.steps):
+        if cfg.input_kind == "embeds":
+            inputs, labels = pipe.next_embed_batch(cfg.d_model)
+        else:
+            inputs, labels = pipe.next_batch()
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, inputs, labels)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        print(f"step {step:4d} loss {loss:.4f} "
+              f"gnorm {float(metrics['grad_norm']):.3f} "
+              f"({time.perf_counter() - t0:.2f}s)")
+        if args.ckpt and (step + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt, step + 1, (params, opt_state),
+                            meta={"arch": cfg.name})
+    return {"first_loss": losses[0] if losses else None,
+            "last_loss": losses[-1] if losses else None}
+
+
+if __name__ == "__main__":
+    out = main()
+    print(out)

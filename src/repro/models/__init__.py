@@ -1,0 +1,4 @@
+from repro.models.sharding import ShardPlan, local_plan, mesh_plan
+from repro.models.transformer import Model, build_model
+
+__all__ = ["Model", "build_model", "ShardPlan", "local_plan", "mesh_plan"]

@@ -1,0 +1,136 @@
+"""Core layer primitives shared by every architecture.
+
+All functions are pure; parameters are plain dict pytrees.  A parallel
+"logical axes" pytree (see sharding.py) names every parameter dimension so
+the launcher can map logical axes -> mesh axes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = 0, scale: float = 1.0, dtype=jnp.float32):
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[in_axis]
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, *, eps: float = 1e-6,
+             plus_one: bool = False) -> jax.Array:
+    """RMSNorm; ``plus_one`` uses the Gemma convention w <- (1 + w)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:
+        w = 1.0 + w
+    return (x * w).astype(dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, *,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def glu_mlp(x: jax.Array, p: Params, *, activation: str = "silu") -> jax.Array:
+    """Gated MLP: act(x Wg) * (x Wu) Wd.  Gemma uses gelu (GeGLU)."""
+    dtype = x.dtype
+    gate = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(dtype))
+    up = jnp.einsum("...d,df->...f", x, p["w_up"].astype(dtype))
+    if activation == "silu":
+        act = jax.nn.silu(gate.astype(jnp.float32)).astype(dtype)
+    elif activation == "gelu":
+        act = jax.nn.gelu(gate.astype(jnp.float32), approximate=True).astype(dtype)
+    else:  # pragma: no cover - config error
+        raise ValueError(activation)
+    return jnp.einsum("...f,fd->...d", act * up, p["w_down"].astype(dtype))
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def gelu_mlp(x: jax.Array, p: Params) -> jax.Array:
+    """Plain 2-layer GELU MLP (HuBERT / classic transformer encoders)."""
+    dtype = x.dtype
+    h = jnp.einsum("...d,df->...f", x, p["w_in"].astype(dtype)) + p["b_in"].astype(dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(dtype)
+    return jnp.einsum("...f,fd->...d", h, p["w_out"].astype(dtype)) + p["b_out"].astype(dtype)
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": dense_init(k2, (d_ff, d_model), dtype=dtype),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def take_embedding(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """Embedding lookup; XLA SPMD handles a vocab-sharded gather."""
+    return jnp.take(table, ids, axis=0)

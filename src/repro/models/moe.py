@@ -1,0 +1,186 @@
+"""Mixture-of-Experts with expert parallelism over the ``model`` mesh axis.
+
+Dispatch is sort-based (no O(T*E) one-hot) with a fixed per-expert capacity;
+the whole block (router -> dispatch -> expert GEMMs -> combine) runs inside
+``shard_map``: tokens are local to each data shard, experts are sharded over
+``model``, and the only collective is one psum of the (T_loc, d) output per
+MoE layer — identical in shape to the Megatron row-parallel all-reduce.
+
+Expert counts not divisible by the TP degree are padded (granite 40 -> 48)
+with pad experts masked to -inf in the router, so they are never selected.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.sharding import ShardPlan, shard_map_or_call
+
+Params = dict[str, Any]
+NEG_INF = -1e30
+
+
+def _quantize_experts(w: jax.Array):
+    """Symmetric per-(expert, out-channel) int8 quantization."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    w_q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127)
+    return w_q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def init_moe(key, cfg: ArchConfig, plan: ShardPlan) -> Params:
+    d, f = cfg.d_model, cfg.expert_d_ff
+    e_pad = plan.e_pad(cfg)
+    dt = plan.param_dtype
+    ks = jax.random.split(key, 4)
+
+    def pad_e(w):
+        return jnp.pad(w, ((0, e_pad - cfg.n_experts),) + ((0, 0),) * (w.ndim - 1))
+
+    p = {
+        "router": L.dense_init(ks[0], (d, cfg.n_experts), dtype=jnp.float32),
+        "w_gate": pad_e(L.dense_init(ks[1], (cfg.n_experts, d, f), in_axis=1, dtype=dt)),
+        "w_up": pad_e(L.dense_init(ks[2], (cfg.n_experts, d, f), in_axis=1, dtype=dt)),
+        "w_down": pad_e(L.dense_init(ks[3], (cfg.n_experts, f, d), in_axis=1, dtype=dt)),
+    }
+    if plan.quantize_serve:
+        # TAPAS quantization knob: expert weights stored int8 + scales
+        # (the serve-time memory-bound lever; see kernels/int8_matmul.py)
+        for name in ("w_gate", "w_up", "w_down"):
+            w_q, s = _quantize_experts(p.pop(name))
+            p[name + "_q"] = w_q
+            p[name + "_s"] = s
+    return p
+
+
+def moe_axes(cfg: ArchConfig, plan: ShardPlan) -> Params:
+    # experts shard over `model` (EP); per-expert ffn dim stays whole — a
+    # second `model` entry would collide with the expert sharding
+    ax = {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", None),
+        "w_up": ("experts", "embed", None),
+        "w_down": ("experts", None, "embed"),
+    }
+    if plan.quantize_serve:
+        for name in ("w_gate", "w_up", "w_down"):
+            base = ax.pop(name)
+            ax[name + "_q"] = base
+            ax[name + "_s"] = ("experts", None, None)
+    return ax
+
+
+def _capacity(t_loc: int, cfg: ArchConfig) -> int:
+    full = t_loc * cfg.top_k
+    if full <= 4096:
+        return full  # decode / tiny batches: zero drops
+    return -(-int(full * cfg.capacity_factor) // cfg.n_experts)
+
+
+def _moe_core(axis, x, router_w, w_gate, w_up, w_down, *, cfg: ArchConfig,
+              e_pad: int, capacity: int, activation: str):
+    """Local MoE on one (data, model) shard.
+
+    x: (T_loc, d) tokens (replicated over model within the data shard);
+    w_*: (E_loc, ...) this device's experts. Returns (y (T_loc, d), aux loss).
+    """
+    T, d = x.shape
+    k = cfg.top_k
+    E = cfg.n_experts
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E) real experts only
+    topv, topi = jax.lax.top_k(probs, k)
+    if cfg.router_renorm:
+        topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+    # aux load-balancing loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((E,)).at[topi.reshape(-1)].add(1.0) / (T * k)
+    aux = E * jnp.sum(me * jax.lax.stop_gradient(ce))
+
+    # ---- sort-based dispatch (index math on (T*k,) vectors) ----
+    flat_e = topi.reshape(-1)  # (T*k,)
+    flat_g = topv.reshape(-1)
+    src_tok = jnp.arange(T * k) // k
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(e_pad))
+    pos_in_e = jnp.arange(T * k) - starts[sorted_e]
+    keep = pos_in_e < capacity
+    slot = jnp.where(keep, sorted_e * capacity + pos_in_e, e_pad * capacity)
+    buf_src = jnp.full((e_pad * capacity + 1,), T, jnp.int32).at[slot].set(
+        jnp.where(keep, src_tok[order], T))[:-1]
+    buf_gate = jnp.zeros((e_pad * capacity + 1,)).at[slot].set(
+        jnp.where(keep, flat_g[order], 0.0))[:-1]
+
+    # ---- local expert slice ----
+    e_loc = w_gate.shape[0]
+    if axis is not None:
+        shard = jax.lax.axis_index(axis)
+        lo = shard * e_loc * capacity
+        buf_src = jax.lax.dynamic_slice_in_dim(buf_src, lo, e_loc * capacity)
+        buf_gate = jax.lax.dynamic_slice_in_dim(buf_gate, lo, e_loc * capacity)
+
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    xg = x_pad[buf_src].reshape(e_loc, capacity, d)
+    gate = jnp.einsum("ecd,edf->ecf", xg, w_gate)
+    up = jnp.einsum("ecd,edf->ecf", xg, w_up)
+    if activation == "gelu":
+        act = jax.nn.gelu(gate.astype(jnp.float32), approximate=True).astype(xg.dtype)
+    else:
+        act = jax.nn.silu(gate.astype(jnp.float32)).astype(xg.dtype)
+    out = jnp.einsum("ecf,efd->ecd", act * up, w_down)
+    out = out * buf_gate.reshape(e_loc, capacity, 1).astype(out.dtype)
+    y = jnp.zeros((T + 1, d), out.dtype).at[buf_src].add(
+        out.reshape(e_loc * capacity, d))[:T]
+    if axis is not None:
+        y = jax.lax.psum(y, axis)
+        aux = jax.lax.pmean(aux, axis)
+    return y, aux
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg: ArchConfig, plan: ShardPlan):
+    """x: (B, S, d) -> (y (B, S, d), aux). Runs in shard_map over (dp, model)."""
+    dt = plan.compute_dtype
+    B, S, d = x.shape
+    t_loc = (B // max(plan.dp, 1)) * S
+    e_pad = plan.e_pad(cfg)
+    cap = _capacity(t_loc, cfg)
+    dp = plan.dp_axes if plan.dp_axes else None
+    quant = plan.quantize_serve and "w_gate_q" in p
+
+    if quant:
+        weights = (p["w_gate_q"], p["w_gate_s"], p["w_up_q"], p["w_up_s"],
+                   p["w_down_q"], p["w_down_s"])
+        w_specs = (P("model", None, None), P("model", None, None)) * 3
+    else:
+        weights = (p["w_gate"].astype(dt), p["w_up"].astype(dt),
+                   p["w_down"].astype(dt))
+        w_specs = (P("model", None, None),) * 3
+
+    def core(axis, xf, rw, *ws):
+        if quant:
+            # dequantize the local expert slice int8 -> compute dtype; HBM
+            # reads are the int8 arrays (half of bf16)
+            wg = (ws[0].astype(jnp.float32) * ws[1]).astype(dt)
+            wu = (ws[2].astype(jnp.float32) * ws[3]).astype(dt)
+            wd = (ws[4].astype(jnp.float32) * ws[5]).astype(dt)
+        else:
+            wg, wu, wd = ws
+        y, aux = _moe_core(axis, xf, rw, wg, wu, wd, cfg=cfg, e_pad=e_pad,
+                           capacity=cap, activation=cfg.activation)
+        if axis is not None and dp is not None:
+            aux = jax.lax.pmean(aux, dp)
+        return y, aux
+
+    xf = x.reshape(B * S, d).astype(dt)
+    in_specs = (P(dp, None), P(None, None)) + w_specs
+    out_specs = (P(dp, None), P())
+    y, aux = shard_map_or_call(
+        plan, core, in_specs, out_specs, xf, p["router"], *weights)
+    y = y.reshape(B, S, d)
+    return plan.constrain(y, ("batch", "seq", "embed_act"), cfg), aux

@@ -1,0 +1,338 @@
+"""State-space / linear-recurrence layers: Mamba (hymba branch) and RWKV6.
+
+Train/prefill use chunked scans: an outer ``lax.scan`` over time chunks
+carries the recurrent state, keeping HLO size O(1) in sequence length and
+temporaries bounded; the Mamba inner chunk uses an associative scan
+(work-efficient on TPU), RWKV6 uses an in-chunk sequential scan (the Pallas
+``rwkv6_wkv`` kernel is the TPU fast path; see kernels/).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.sharding import ShardPlan
+
+Params = dict[str, Any]
+
+
+# ===========================================================================
+# Mamba (selective SSM) — used as the parallel branch in hymba
+# ===========================================================================
+
+def _dt_rank(cfg: ArchConfig) -> int:
+    return max(16, cfg.d_model // 16)
+
+
+def init_mamba(key, cfg: ArchConfig, plan: ShardPlan) -> Params:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr = _dt_rank(cfg)
+    dt = plan.param_dtype
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": L.dense_init(ks[0], (d, 2, di), dtype=dt),  # x branch + gate z
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, di)) * 0.1).astype(dt),
+        "w_bcdt": L.dense_init(ks[2], (di, dtr + 2 * n), dtype=dt),
+        "w_dt": L.dense_init(ks[3], (dtr, di), dtype=dt),
+        "dt_bias": jnp.full((di,), -4.6, dt),  # softplus^-1(0.01)
+        "a_log": jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))).astype(dt),
+        "d_skip": jnp.ones((di,), dt),
+        "w_out": L.dense_init(ks[5], (di, d), dtype=dt),
+    }
+
+
+def mamba_axes(cfg: ArchConfig, plan: ShardPlan) -> Params:
+    return {
+        "w_in": ("embed", None, "d_inner"),
+        "conv_w": ("conv", "d_inner"),
+        "w_bcdt": ("d_inner", None),
+        "w_dt": (None, "d_inner"),
+        "dt_bias": ("d_inner",),
+        "a_log": ("d_inner", "state"),
+        "d_skip": ("d_inner",),
+        "w_out": ("d_inner", "embed"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, x_prev: jax.Array | None = None):
+    """Depthwise causal conv over time. x: (B, S, di); w: (cw, di).
+
+    ``x_prev``: (B, cw-1, di) left context (decode/chunk carry); zeros if None.
+    Returns (y (B, S, di), new left-context (B, cw-1, di)).
+    """
+    cw = w.shape[0]
+    if x_prev is None:
+        x_prev = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([x_prev, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    return y, xp[:, -(cw - 1):]
+
+
+def _selective_scan_chunk(a, b, h0):
+    """a, b: (B, C, di, n) decay / input; h0: (B, di, n). Returns (h_seq, h_last)."""
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+    a_cum, b_cum = jax.lax.associative_scan(op, (a, b), axis=1)
+    h = a_cum * h0[:, None] + b_cum
+    return h, h[:, -1]
+
+
+def mamba_forward(p: Params, x: jax.Array, cfg: ArchConfig, plan: ShardPlan,
+                  state: Params | None = None, *, chunk: int = 256):
+    """x: (B, S, d) -> (y (B, S, d), new state). Train/prefill path."""
+    dt = plan.compute_dtype
+    B, S, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    dtr = _dt_rank(cfg)
+    xz = jnp.einsum("bsd,dci->bsci", x, p["w_in"].astype(dt))
+    xin, z = xz[:, :, 0], xz[:, :, 1]
+    xin = plan.constrain(xin, ("batch", "seq", "d_inner"), cfg)
+    conv_prev = state["conv"] if state is not None else None
+    xc, conv_new = _causal_conv(xin, p["conv_w"].astype(dt), conv_prev)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(dt)
+    bcdt = jnp.einsum("bsi,ir->bsr", xc, p["w_bcdt"].astype(dt))
+    dt_lo, Bs, Cs = jnp.split(bcdt, [dtr, dtr + n], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_lo, p["w_dt"].astype(dt)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))  # (B, S, di)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, n)
+    h0 = (state["ssm"].astype(jnp.float32) if state is not None
+          else jnp.zeros((B, di, n), jnp.float32))
+
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    nchunks = S // c
+    a_all = jnp.exp(delta[..., None] * A)  # (B, S, di, n)
+    b_all = (delta[..., None] * Bs[:, :, None, :].astype(jnp.float32)
+             * xc[..., None].astype(jnp.float32))
+    ar = a_all.reshape(B, nchunks, c, di, n).transpose(1, 0, 2, 3, 4)
+    br = b_all.reshape(B, nchunks, c, di, n).transpose(1, 0, 2, 3, 4)
+
+    def body(h, inp):
+        ai, bi = inp
+        hseq, hlast = _selective_scan_chunk(ai, bi, h)
+        return hlast, hseq
+
+    h_last, hs = jax.lax.scan(body, h0, (ar, br))
+    h_seq = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, di, n)
+    y = jnp.einsum("bsin,bsn->bsi", h_seq.astype(jnp.float32),
+                   Cs.astype(jnp.float32))
+    y = (y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)).astype(dt)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"].astype(dt))
+    new_state = {"conv": conv_new, "ssm": h_last.astype(jnp.float32)}
+    return plan.constrain(out, ("batch", "seq", "embed_act"), cfg), new_state
+
+
+def mamba_decode(p: Params, x: jax.Array, state: Params, cfg: ArchConfig,
+                 plan: ShardPlan):
+    """x: (B, d) single token; state: {'conv': (B, cw-1, di), 'ssm': (B, di, n)}."""
+    y, new_state = mamba_forward(p, x[:, None], cfg, plan, state, chunk=1)
+    return y[:, 0], new_state
+
+
+def init_mamba_state(cfg: ArchConfig, plan: ShardPlan, batch: int,
+                     dtype=jnp.bfloat16):
+    di, n = cfg.d_inner, cfg.ssm_state
+    s = {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, n), jnp.float32),
+    }
+    ax = {"conv": ("batch", "conv", "d_inner"), "ssm": ("batch", "d_inner", "state")}
+    return s, ax
+
+
+# ===========================================================================
+# RWKV6 (Finch): data-dependent decay, token-shift, wkv recurrence
+# ===========================================================================
+
+def init_rwkv_tmix(key, cfg: ArchConfig, plan: ShardPlan) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    h_pad = plan.h_pad(cfg)
+    hdim = h_pad * hd
+    lw = cfg.rwkv_lora_w
+    dt = plan.param_dtype
+    ks = jax.random.split(key, 12)
+    names = ["r", "k", "v", "w", "g"]
+    p = {
+        "mu_base": jnp.full((d,), 0.5, dt),
+        "mu": jnp.stack([jnp.full((d,), 0.5, dt)] * 5),  # (5, d) per r/k/v/w/g
+        "lora_a": (jax.random.normal(ks[0], (5, d, 32)) * 0.01).astype(dt),
+        "lora_b": (jax.random.normal(ks[1], (5, 32, d)) * 0.01).astype(dt),
+        "w_r": L.dense_init(ks[2], (d, h_pad, hd), dtype=dt),
+        "w_k": L.dense_init(ks[3], (d, h_pad, hd), dtype=dt),
+        "w_v": L.dense_init(ks[4], (d, h_pad, hd), dtype=dt),
+        "w_g": L.dense_init(ks[5], (d, h_pad, hd), dtype=dt),
+        "w_o": L.dense_init(ks[6], (h_pad, hd, d), in_axis=1, dtype=dt),
+        "decay_base": jnp.full((h_pad, hd), -6.0, dt),
+        "decay_a": (jax.random.normal(ks[7], (d, lw)) * 0.01).astype(dt),
+        "decay_b": (jax.random.normal(ks[8], (lw, h_pad, hd)) * 0.01).astype(dt),
+        "u_bonus": (jax.random.normal(ks[9], (h_pad, hd)) * 0.1).astype(dt),
+        "ln_x": jnp.ones((h_pad, hd), dt),
+    }
+    del names
+    return p
+
+
+def rwkv_tmix_axes(cfg: ArchConfig, plan: ShardPlan) -> Params:
+    return {
+        "mu_base": ("embed",),
+        "mu": (None, "embed"),
+        "lora_a": (None, "embed", None),
+        "lora_b": (None, None, "embed"),
+        "w_r": ("embed", "heads", "qk_dim"),
+        "w_k": ("embed", "heads", "qk_dim"),
+        "w_v": ("embed", "heads", "qk_dim"),
+        "w_g": ("embed", "heads", "qk_dim"),
+        "w_o": ("heads", "qk_dim", "embed"),
+        "decay_base": ("heads", "qk_dim"),
+        "decay_a": ("embed", "lora"),
+        "decay_b": ("lora", "heads", "qk_dim"),
+        "u_bonus": ("heads", "qk_dim"),
+        "ln_x": ("heads", "qk_dim"),
+    }
+
+
+def _rwkv_mix(p, x, x_prev):
+    """ddlerp token-shift: returns (B, S, 5, d) mixed inputs for r/k/v/w/g."""
+    dt = x.dtype
+    xx = x_prev - x  # (B, S, d)
+    base = x + xx * p["mu_base"].astype(dt)
+    lo = jnp.tanh(jnp.einsum("bsd,cdr->bscr", base, p["lora_a"].astype(dt)))
+    dyn = jnp.einsum("bscr,crd->bscd", lo, p["lora_b"].astype(dt))
+    mixes = p["mu"].astype(dt)[None, None] + dyn  # (B, S, 5, d)
+    return x[:, :, None, :] + xx[:, :, None, :] * mixes
+
+
+def _wkv_chunk(r, k, v, w, u, s0):
+    """Sequential wkv within a chunk.
+
+    r,k,v,w: (B, C, H, hd) — w is per-step decay in (0,1);
+    u: (H, hd); s0: (B, H, hd, hd). Returns (y (B,C,H,hd), s_last).
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B, H, hd)
+        at = kt[..., :, None] * vt[..., None, :]  # (B, H, hdk, hdv)
+        bonus = (u[None] * kt)[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + bonus)
+        s = wt[..., :, None] * s + at
+        return s, y
+
+    rs, ks_, vs, ws = (t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    s_last, ys = jax.lax.scan(step, s0, (rs, ks_, vs, ws))
+    return ys.transpose(1, 0, 2, 3), s_last
+
+
+def rwkv_tmix_forward(p: Params, x: jax.Array, cfg: ArchConfig, plan: ShardPlan,
+                      state: Params | None = None, *, chunk: int = 64):
+    """RWKV6 time-mix. x: (B, S, d) -> (y, new_state)."""
+    dt = plan.compute_dtype
+    B, S, d = x.shape
+    h_pad, hd = plan.h_pad(cfg), cfg.head_dim
+    x_last = state["shift"] if state is not None else jnp.zeros((B, 1, d), dt)
+    x_prev = jnp.concatenate([x_last, x[:, :-1]], axis=1)
+    mixed = _rwkv_mix(p, x, x_prev)  # (B, S, 5, d)
+    xr, xk, xv, xw, xg = (mixed[:, :, i] for i in range(5))
+    r = jnp.einsum("bsd,dhk->bshk", xr, p["w_r"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", xk, p["w_k"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", xv, p["w_v"].astype(dt))
+    g = jnp.einsum("bsd,dhk->bshk", xg, p["w_g"].astype(dt))
+    dlo = jnp.einsum("bsd,dr->bsr", xw, p["decay_a"].astype(dt))
+    dw = p["decay_base"].astype(jnp.float32) + jnp.einsum(
+        "bsr,rhk->bshk", dlo, p["decay_b"].astype(dt)).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dw))  # (B, S, H, hd) in (0, 1)
+    r = plan.constrain(r, ("batch", "seq", "heads", None), cfg)
+    k = plan.constrain(k, ("batch", "seq", "heads", None), cfg)
+    v = plan.constrain(v, ("batch", "seq", "heads", None), cfg)
+
+    s0 = (state["wkv"] if state is not None
+          else jnp.zeros((B, h_pad, hd, hd), jnp.float32))
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    n = S // c
+    u = p["u_bonus"].astype(jnp.float32)
+
+    def body(s, inp):
+        rc, kc, vc, wc = inp
+        y, s = _wkv_chunk(rc.astype(jnp.float32), kc.astype(jnp.float32),
+                          vc.astype(jnp.float32), wc, u, s)
+        return s, y
+
+    resh = lambda t: t.reshape(B, n, c, h_pad, hd).transpose(1, 0, 2, 3, 4)
+    s_last, ys = jax.lax.scan(body, s0, (resh(r), resh(k), resh(v), resh(w.astype(jnp.float32))))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, h_pad, hd)
+    # per-head group norm + gate
+    y = L.rms_norm(y.astype(dt), p["ln_x"])
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(dt)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["w_o"].astype(dt))
+    new_state = {"shift": x[:, -1:].astype(dt), "wkv": s_last}
+    return plan.constrain(out, ("batch", "seq", "embed_act"), cfg), new_state
+
+
+def init_rwkv_cmix(key, cfg: ArchConfig, plan: ShardPlan) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = plan.param_dtype
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "w_k": L.dense_init(ks[0], (d, f), dtype=dt),
+        "w_v": L.dense_init(ks[1], (f, d), dtype=dt),
+        "w_r": L.dense_init(ks[2], (d, d), dtype=dt),
+    }
+
+
+def rwkv_cmix_axes(cfg: ArchConfig, plan: ShardPlan) -> Params:
+    return {
+        "mu_k": ("embed",),
+        "mu_r": ("embed",),
+        "w_k": ("embed", "ffn"),
+        "w_v": ("ffn", "embed"),
+        "w_r": ("embed", "embed_act"),
+    }
+
+
+def rwkv_cmix_forward(p: Params, x: jax.Array, cfg: ArchConfig, plan: ShardPlan,
+                      state: Params | None = None):
+    """RWKV channel-mix FFN with token shift. x: (B, S, d)."""
+    dt = plan.compute_dtype
+    B, S, d = x.shape
+    x_last = state["shift"] if state is not None else jnp.zeros((B, 1, d), dt)
+    x_prev = jnp.concatenate([x_last, x[:, :-1]], axis=1)
+    xx = x_prev - x
+    xk = x + xx * p["mu_k"].astype(dt)
+    xr = x + xx * p["mu_r"].astype(dt)
+    h = jnp.einsum("bsd,df->bsf", xk, p["w_k"].astype(dt))
+    h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(dt)
+    kv = jnp.einsum("bsf,fd->bsd", h, p["w_v"].astype(dt))
+    rgate = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr, p["w_r"].astype(dt)).astype(jnp.float32)).astype(dt)
+    out = rgate * kv
+    new_state = {"shift": x[:, -1:].astype(dt)}
+    return plan.constrain(out, ("batch", "seq", "embed_act"), cfg), new_state
+
+
+def init_rwkv_state(cfg: ArchConfig, plan: ShardPlan, batch: int,
+                    dtype=jnp.bfloat16):
+    h_pad, hd = plan.h_pad(cfg), cfg.head_dim
+    s = {
+        "tmix": {
+            "shift": jnp.zeros((batch, 1, cfg.d_model), dtype),
+            "wkv": jnp.zeros((batch, h_pad, hd, hd), jnp.float32),
+        },
+        "cmix": {"shift": jnp.zeros((batch, 1, cfg.d_model), dtype)},
+    }
+    ax = {
+        "tmix": {"shift": ("batch", None, "embed_act"),
+                 "wkv": ("batch", "heads", "qk_dim", None)},
+        "cmix": {"shift": ("batch", None, "embed_act")},
+    }
+    return s, ax

@@ -1,0 +1,502 @@
+"""Model assembly: per-family blocks + scan-over-layers + Model API.
+
+``jax.lax.scan`` over stacked per-layer parameters keeps HLO size (and
+compile time on this 1-core container) O(1) in depth.  The same block
+functions serve train, prefill and decode; decode uses the shard_map cores
+from attention.py / moe.py.
+
+Cross-entropy runs inside shard_map over the vocab-sharded unembedding with
+a checkpointed chunk scan, so the (T, V) logits are never materialised
+globally (V_loc chunks only) — this is what keeps gemma's 256k vocab inside
+HBM at train time.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.sharding import ShardPlan, shard_map_or_call
+
+Params = dict[str, Any]
+NEG_INF = -1e30
+MOE_AUX_WEIGHT = 0.01
+
+
+def _norm(x, w, cfg: ArchConfig):
+    if cfg.norm_kind == "layer":
+        return L.layer_norm(x, w["scale"], w["bias"])
+    return L.rms_norm(x, w["scale"], plus_one=cfg.norm_plus_one)
+
+
+def _norm_init(cfg: ArchConfig, dt) -> Params:
+    scale = jnp.zeros if cfg.norm_plus_one else jnp.ones
+    p = {"scale": scale((cfg.d_model,), dt)}
+    if cfg.norm_kind == "layer":
+        p["bias"] = jnp.zeros((cfg.d_model,), dt)
+    return p
+
+
+def _norm_axes(cfg: ArchConfig) -> Params:
+    p = {"scale": ("embed_act",)}
+    if cfg.norm_kind == "layer":
+        p["bias"] = ("embed_act",)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / axes
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ArchConfig, plan: ShardPlan) -> Params:
+    dt = plan.param_dtype
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {"norm1": _norm_init(cfg, dt), "norm2": _norm_init(cfg, dt)}
+    if cfg.rwkv:
+        p["tmix"] = S.init_rwkv_tmix(k1, cfg, plan)
+        p["cmix"] = S.init_rwkv_cmix(k2, cfg, plan)
+        return p
+    if cfg.attn_kind == "mla":
+        p["attn"] = A.init_mla(k1, cfg, plan)
+    else:
+        p["attn"] = A.init_gqa(k1, cfg, plan)
+    if cfg.family == "hybrid":
+        p["mamba"] = S.init_mamba(k2, cfg, plan)
+    if cfg.n_experts:
+        p["moe"] = M.init_moe(k3, cfg, plan)
+    elif cfg.mlp_kind == "gelu2":
+        p["mlp"] = L.gelu_mlp_init(k4, cfg.d_model, cfg.d_ff, dtype=dt)
+    else:
+        p["mlp"] = L.mlp_init(k4, cfg.d_model, cfg.d_ff, dtype=dt)
+    return p
+
+
+def layer_axes(cfg: ArchConfig, plan: ShardPlan) -> Params:
+    ax: Params = {"norm1": _norm_axes(cfg), "norm2": _norm_axes(cfg)}
+    if cfg.rwkv:
+        ax["tmix"] = S.rwkv_tmix_axes(cfg, plan)
+        ax["cmix"] = S.rwkv_cmix_axes(cfg, plan)
+        return ax
+    if cfg.attn_kind == "mla":
+        ax["attn"] = A.mla_axes(cfg, plan)
+    else:
+        ax["attn"] = A.gqa_axes(cfg, plan)
+    if cfg.family == "hybrid":
+        ax["mamba"] = S.mamba_axes(cfg, plan)
+    if cfg.n_experts:
+        ax["moe"] = M.moe_axes(cfg, plan)
+    elif cfg.mlp_kind == "gelu2":
+        ax["mlp"] = {"w_in": ("embed", "ffn"), "b_in": ("ffn",),
+                     "w_out": ("ffn", "embed"), "b_out": ("embed_act",)}
+    else:
+        ax["mlp"] = {"w_gate": ("embed", "ffn"), "w_up": ("embed", "ffn"),
+                     "w_down": ("ffn", "embed")}
+    return ax
+
+
+# ---------------------------------------------------------------------------
+# block forward (train / prefill): x (B, S, d)
+# ---------------------------------------------------------------------------
+
+def block_forward(x, lp: Params, positions, cfg: ArchConfig, plan: ShardPlan,
+                  *, want_cache: bool, state: Params | None = None):
+    """Returns (x, cache_or_None, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.rwkv:
+        st = state or {}
+        y, tmix_state = S.rwkv_tmix_forward(lp["tmix"], _norm(x, lp["norm1"], cfg),
+                                            cfg, plan, st.get("tmix"))
+        x = x + y
+        y, cmix_state = S.rwkv_cmix_forward(lp["cmix"], _norm(x, lp["norm2"], cfg),
+                                            cfg, plan, st.get("cmix"))
+        x = x + y
+        cache = {"tmix": tmix_state, "cmix": cmix_state} if want_cache else None
+        return x, cache, aux
+
+    h = _norm(x, lp["norm1"], cfg)
+    if cfg.attn_kind == "mla":
+        attn_out, attn_cache = A.mla_forward(lp["attn"], h, positions, cfg, plan,
+                                             want_cache=want_cache)
+    else:
+        attn_out, attn_cache = A.gqa_forward(lp["attn"], h, positions, cfg, plan,
+                                             want_cache=want_cache)
+    if cfg.family == "hybrid":
+        st = state or {}
+        mamba_out, mamba_state = S.mamba_forward(lp["mamba"], h, cfg, plan,
+                                                 st.get("mamba"))
+        x = x + 0.5 * (attn_out + mamba_out)
+    else:
+        x = x + attn_out
+        mamba_state = None
+
+    h = _norm(x, lp["norm2"], cfg)
+    if cfg.n_experts:
+        y, aux = M.moe_ffn(lp["moe"], h, cfg, plan)
+    elif cfg.mlp_kind == "gelu2":
+        y = L.gelu_mlp(h, {k: v.astype(plan.compute_dtype) for k, v in lp["mlp"].items()})
+        y = plan.constrain(y, ("batch", "seq", "embed_act"), cfg)
+    else:
+        y = L.glu_mlp(h, {k: v.astype(plan.compute_dtype) for k, v in lp["mlp"].items()},
+                      activation=cfg.activation)
+        y = plan.constrain(y, ("batch", "seq", "embed_act"), cfg)
+    x = x + y
+
+    cache = None
+    if want_cache:
+        cache = {"attn": attn_cache}
+        if mamba_state is not None:
+            cache["mamba"] = mamba_state
+    return x, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# block decode: x (B, d), per-layer cache
+# ---------------------------------------------------------------------------
+
+def block_decode(x, lp: Params, lc: Params, positions, cfg: ArchConfig,
+                 plan: ShardPlan):
+    """Returns (x, new_cache)."""
+    if cfg.rwkv:
+        x3 = x[:, None]
+        y, tmix_state = S.rwkv_tmix_forward(lp["tmix"], _norm(x3, lp["norm1"], cfg),
+                                            cfg, plan, lc["tmix"])
+        x3 = x3 + y
+        y, cmix_state = S.rwkv_cmix_forward(lp["cmix"], _norm(x3, lp["norm2"], cfg),
+                                            cfg, plan, lc["cmix"])
+        x3 = x3 + y
+        return x3[:, 0], {"tmix": tmix_state, "cmix": cmix_state}
+
+    h = _norm(x, lp["norm1"], cfg)
+    if cfg.attn_kind == "mla":
+        attn_out, attn_cache = A.mla_decode(lp["attn"], h, lc["attn"], positions,
+                                            cfg, plan)
+    else:
+        attn_out, attn_cache = A.gqa_decode(lp["attn"], h, lc["attn"], positions,
+                                            cfg, plan)
+    if cfg.family == "hybrid":
+        mamba_out, mamba_state = S.mamba_decode(lp["mamba"], h, lc["mamba"], cfg, plan)
+        x = x + 0.5 * (attn_out + mamba_out)
+    else:
+        x = x + attn_out
+        mamba_state = None
+
+    h = _norm(x, lp["norm2"], cfg)
+    if cfg.n_experts:
+        y, _ = M.moe_ffn(lp["moe"], h[:, None], cfg, plan)
+        y = y[:, 0]
+    elif cfg.mlp_kind == "gelu2":
+        y = L.gelu_mlp(h, {k: v.astype(plan.compute_dtype) for k, v in lp["mlp"].items()})
+    else:
+        y = L.glu_mlp(h, {k: v.astype(plan.compute_dtype) for k, v in lp["mlp"].items()},
+                      activation=cfg.activation)
+    x = x + y
+    new_cache = {"attn": attn_cache}
+    if mamba_state is not None:
+        new_cache["mamba"] = mamba_state
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# vocab-sharded embedding / loss
+# ---------------------------------------------------------------------------
+
+def _embed_core(axis, table, ids):
+    v_loc = table.shape[0]
+    off = (jax.lax.axis_index(axis) * v_loc) if axis is not None else 0
+    local = ids - off
+    valid = (local >= 0) & (local < v_loc)
+    e = jnp.take(table, jnp.clip(local, 0, v_loc - 1), axis=0)
+    e = jnp.where(valid[..., None], e, 0)
+    if axis is not None:
+        e = jax.lax.psum(e, axis)
+    return e
+
+
+def embed_lookup(table, ids, cfg: ArchConfig, plan: ShardPlan):
+    dp = plan.dp_axes if plan.dp_axes else None
+    specs_in = (P("model", None), P(dp, None) if ids.ndim == 2 else P(dp))
+    out = P(dp, None, None) if ids.ndim == 2 else P(dp, None)
+    return shard_map_or_call(plan, _embed_core, specs_in, out,
+                             table.astype(plan.compute_dtype), ids)
+
+
+def _xent_core(axis, x, w_u, labels, *, vocab_size: int, n_chunks: int):
+    """Chunked, checkpointed cross-entropy on a vocab shard.
+
+    x: (T_loc, d); w_u: (d, V_loc); labels: (T_loc,). Returns summed loss.
+    """
+    t = x.shape[0]
+    v_loc = w_u.shape[1]
+    off = (jax.lax.axis_index(axis) * v_loc) if axis is not None else 0
+    cols = off + jnp.arange(v_loc)
+    col_valid = cols < vocab_size
+    chunk = t // n_chunks
+
+    @jax.checkpoint
+    def chunk_loss(xc, lc):
+        logits = jnp.einsum("td,dv->tv", xc, w_u,
+                            preferred_element_type=jnp.float32)
+        logits = jnp.where(col_valid[None, :], logits, NEG_INF)
+        # stability shift: stop_gradient BEFORE pmax (pmax has no JVP rule;
+        # the shift cancels in the gradient anyway)
+        m = jax.lax.stop_gradient(jnp.max(logits, axis=-1))
+        if axis is not None:
+            m = jax.lax.pmax(m, axis)
+        se = jnp.sum(jnp.exp(logits - m[:, None]), axis=-1)
+        if axis is not None:
+            se = jax.lax.psum(se, axis)
+        lse = jnp.log(se) + m
+        lab_local = lc - off
+        lab_valid = (lab_local >= 0) & (lab_local < v_loc)
+        lab_logit = jnp.take_along_axis(
+            logits, jnp.clip(lab_local, 0, v_loc - 1)[:, None], axis=1)[:, 0]
+        lab_logit = jnp.where(lab_valid, lab_logit, 0.0)
+        if axis is not None:
+            lab_logit = jax.lax.psum(lab_logit, axis)
+        return jnp.sum(lse - lab_logit)
+
+    def body(acc, inp):
+        xc, lc = inp
+        return acc + chunk_loss(xc, lc), None
+
+    xs = x.reshape(n_chunks, chunk, -1)
+    ls = labels.reshape(n_chunks, chunk)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls))
+    return total
+
+
+def sharded_xent(x, w_u, labels, cfg: ArchConfig, plan: ShardPlan,
+                 *, n_chunks: int = 8):
+    """Mean next-token loss; x: (B, S, d), labels: (B, S)."""
+    B, Sq, d = x.shape
+    t = B * Sq
+    dp = plan.dp_axes if plan.dp_axes else None
+    xf = x.reshape(t, d)
+    lf = labels.reshape(t)
+    while n_chunks > 1 and t // max(plan.dp, 1) % n_chunks:
+        n_chunks //= 2
+
+    def core(axis, xc, wc, lc):
+        s = _xent_core(axis, xc, wc, lc, vocab_size=cfg.vocab_size,
+                       n_chunks=n_chunks)
+        if axis is not None and dp is not None:
+            s = jax.lax.psum(s, dp)  # sum per-data-shard partials
+        return s
+
+    in_specs = (P(dp, None), P(None, "model"), P(dp))
+    total = shard_map_or_call(plan, core, in_specs, P(), xf,
+                              w_u.astype(plan.compute_dtype), lf)
+    return total / t
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+class Model:
+    """One assigned architecture bound to a shard plan."""
+
+    def __init__(self, cfg: ArchConfig, plan: ShardPlan):
+        self.cfg = cfg
+        self.plan = plan
+
+    # ----- params -----
+    def init(self, rng) -> Params:
+        cfg, plan = self.cfg, self.plan
+        dt = plan.param_dtype
+        k_embed, k_layers, k_out = jax.random.split(rng, 3)
+        v_pad = plan.v_pad(cfg)
+        p: Params = {}
+        if cfg.input_kind == "tokens":
+            emb = L.embed_init(k_embed, (cfg.vocab_size, cfg.d_model), dtype=dt)
+            p["embed"] = jnp.pad(emb, ((0, v_pad - cfg.vocab_size), (0, 0)))
+        keys = jax.random.split(k_layers, cfg.num_layers)
+        p["layers"] = jax.vmap(lambda k: init_layer(k, cfg, plan))(keys)
+        p["final_norm"] = _norm_init(cfg, dt)
+        if not (cfg.tie_embeddings and cfg.input_kind == "tokens"):
+            w = L.dense_init(k_out, (cfg.d_model, cfg.vocab_size), dtype=dt)
+            p["unembed"] = jnp.pad(w, ((0, 0), (0, v_pad - cfg.vocab_size)))
+        return p
+
+    def param_axes(self) -> Params:
+        cfg, plan = self.cfg, self.plan
+        ax: Params = {}
+        if cfg.input_kind == "tokens":
+            ax["embed"] = ("vocab", "embed")
+        lax_ = layer_axes(cfg, plan)
+        ax["layers"] = jax.tree.map(lambda a: ("layers",) + a, lax_,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        ax["final_norm"] = _norm_axes(cfg)
+        if not (cfg.tie_embeddings and cfg.input_kind == "tokens"):
+            ax["unembed"] = ("embed", "vocab")
+        return ax
+
+    def param_shardings(self):
+        return self.plan.tree_shardings(self.param_axes(), self.cfg)
+
+    def _unembed_w(self, params: Params):
+        if self.cfg.tie_embeddings and self.cfg.input_kind == "tokens":
+            return params["embed"].T
+        return params["unembed"]
+
+    # ----- input embedding -----
+    def _embed_inputs(self, params, inputs):
+        cfg, plan = self.cfg, self.plan
+        if cfg.input_kind == "embeds":
+            x = inputs.astype(plan.compute_dtype)
+        else:
+            x = embed_lookup(params["embed"], inputs, cfg, plan)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), plan.compute_dtype)
+        return plan.constrain(x, ("batch", "seq", "embed_act"), cfg)
+
+    # ----- forward (train/prefill trunk) -----
+    def _trunk(self, params, x, positions, *, want_cache: bool):
+        cfg, plan = self.cfg, self.plan
+
+        def body(carry, lp):
+            x, aux = carry
+            x, cache, aux_l = block_forward(x, lp, positions, cfg, plan,
+                                            want_cache=want_cache)
+            return (x, aux + aux_l), cache
+
+        if plan.remat == "full":
+            body = jax.checkpoint(body)
+        (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                        params["layers"])
+        x = _norm(x, params["final_norm"], cfg)
+        return x, caches, aux
+
+    def loss(self, params, inputs, labels):
+        cfg, plan = self.cfg, self.plan
+        x = self._embed_inputs(params, inputs)
+        Sq = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(Sq)[None, :], x.shape[:2])
+        x, _, aux = self._trunk(params, x, positions, want_cache=False)
+        ce = sharded_xent(x, self._unembed_w(params), labels, cfg, plan)
+        return ce + MOE_AUX_WEIGHT * aux
+
+    def logits(self, params, inputs):
+        """Full-sequence logits (small inputs / tests only)."""
+        cfg, plan = self.cfg, self.plan
+        x = self._embed_inputs(params, inputs)
+        Sq = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(Sq)[None, :], x.shape[:2])
+        x, _, _ = self._trunk(params, x, positions, want_cache=False)
+        return self._head(params, x)
+
+    def _head(self, params, x):
+        cfg, plan = self.cfg, self.plan
+        w = self._unembed_w(params).astype(plan.compute_dtype)
+        logits = jnp.einsum("...d,dv->...v", x, w)
+        cols = jnp.arange(logits.shape[-1])
+        return jnp.where(cols < cfg.vocab_size, logits, NEG_INF)
+
+    # ----- serving -----
+    def prefill(self, params, inputs):
+        """Returns (last-token logits (B, V_pad), cache stacked over layers)."""
+        cfg, plan = self.cfg, self.plan
+        x = self._embed_inputs(params, inputs)
+        Sq = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(Sq)[None, :], x.shape[:2])
+        x, caches, _ = self._trunk(params, x, positions, want_cache=True)
+        logits = self._head(params, x[:, -1])
+        return logits, caches
+
+    def decode_step(self, params, cache, tokens, positions):
+        """One token per sequence. tokens: (B,), positions: (B,)."""
+        cfg, plan = self.cfg, self.plan
+        if cfg.input_kind == "embeds":
+            raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+        x = embed_lookup(params["embed"], tokens, cfg, plan)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), plan.compute_dtype)
+
+        def body(x, inp):
+            lp, lc = inp
+            x, new_lc = block_decode(x, lp, lc, positions, cfg, plan)
+            return x, new_lc
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        x = _norm(x, params["final_norm"], cfg)
+        logits = self._head(params, x)
+        return logits, new_cache
+
+    # ----- grads -----
+    def canonicalize_grads(self, grads: Params) -> Params:
+        """Zero pad-head grads / tie padded-kv-copy grads so the padded model
+        stays exactly equivalent to the published architecture."""
+        cfg, plan = self.cfg, self.plan
+        H, h_pad = cfg.n_heads, plan.h_pad(cfg)
+        lay = dict(grads["layers"])
+
+        def zero_tail(w, axis):
+            idx = [slice(None)] * w.ndim
+            idx[axis] = slice(H, None)
+            return w.at[tuple(idx)].set(0)
+
+        if cfg.rwkv and h_pad != H:
+            t = dict(lay["tmix"])
+            for name in ("w_r", "w_k", "w_v", "w_g"):
+                t[name] = zero_tail(t[name], 2)
+            t["w_o"] = zero_tail(t["w_o"], 1)
+            t["decay_b"] = zero_tail(t["decay_b"], 2)
+            for name in ("decay_base", "u_bonus", "ln_x"):
+                t[name] = zero_tail(t[name], 1)
+            lay["tmix"] = t
+        elif "attn" in lay:
+            if cfg.attn_kind == "mla":
+                if h_pad != H:
+                    a = dict(lay["attn"])
+                    for name in ("w_uq", "w_uk", "w_uv"):
+                        a[name] = zero_tail(a[name], 2)
+                    a["w_o"] = zero_tail(a["w_o"], 1)
+                    lay["attn"] = a
+            else:
+                lay["attn"] = A.canonicalize_gqa_grads(lay["attn"], cfg, plan)
+        out = dict(grads)
+        out["layers"] = lay
+        return out
+
+    # ----- cache -----
+    def init_cache(self, batch: int, seq_len: int, dtype=jnp.bfloat16):
+        cfg, plan = self.cfg, self.plan
+        single, _ = self._cache_template(batch, seq_len, dtype)
+        return jax.tree.map(
+            lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), single)
+
+    def cache_axes(self):
+        _, ax = self._cache_template(1, 8, jnp.bfloat16)
+        return jax.tree.map(lambda a: ("layers",) + a, ax,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    def cache_shardings(self):
+        return self.plan.tree_shardings(self.cache_axes(), self.cfg)
+
+    def _cache_template(self, batch, seq_len, dtype):
+        cfg, plan = self.cfg, self.plan
+        if cfg.rwkv:
+            return S.init_rwkv_state(cfg, plan, batch, dtype)
+        c, ax = A.init_attn_cache(cfg, plan, batch, seq_len, dtype)
+        cache = {"attn": c}
+        axes = {"attn": ax}
+        if cfg.family == "hybrid":
+            ms, max_ = S.init_mamba_state(cfg, plan, batch, dtype)
+            cache["mamba"] = ms
+            axes["mamba"] = max_
+        return cache, axes
+
+
+def build_model(name_or_cfg, plan: ShardPlan) -> Model:
+    from repro.configs import get_config
+    cfg = name_or_cfg if isinstance(name_or_cfg, ArchConfig) else get_config(name_or_cfg)
+    return Model(cfg, plan)

@@ -1,0 +1,5 @@
+from repro.serving.engine import Engine, EngineKnobs, EngineStats
+from repro.serving.kvcache import CachePool
+from repro.serving.request import Request
+
+__all__ = ["Engine", "EngineKnobs", "EngineStats", "CachePool", "Request"]

@@ -1,0 +1,148 @@
+"""LLM serving engine: continuous batching over a slot-based KV cache.
+
+One Engine == one SaaS "VM instance" in TAPAS terms.  It exposes the knobs
+the Instance Configurator turns (paper Table 1): max batch size, frequency
+cap (simulated via a step-time multiplier), model variant (size /
+quantization — swap params), and reports goodput (tokens/s within TTFT/TBT
+SLOs, SLO = 5x unloaded latency, paper §3.3).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+from repro.serving.kvcache import CachePool
+from repro.serving.request import Request
+
+
+@dataclass
+class EngineKnobs:
+    """The TAPAS-configurable instance settings."""
+    max_batch: int = 8
+    freq_scale: float = 1.0      # 1.0 = nominal clock; <1 slows step time
+    variant: str = "full"        # model-size / quantization variant key
+    paused: bool = False         # drained during reconfiguration (§4.3)
+
+
+@dataclass
+class EngineStats:
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    completed: list = field(default_factory=list)
+    step_times: list = field(default_factory=list)
+
+
+class Engine:
+    def __init__(self, model: Model, params: Any, *, max_seq: int = 512,
+                 n_slots: int = 8, knobs: EngineKnobs | None = None):
+        self.model = model
+        self.variants: dict[str, tuple[Model, Any]] = {"full": (model, params)}
+        self.knobs = knobs or EngineKnobs(max_batch=n_slots)
+        self.pool = CachePool(model, n_slots, max_seq)
+        self.max_seq = max_seq
+        self.queue: list[Request] = []
+        self.active: dict[int, Request] = {}
+        self.stats = EngineStats()
+        self._prefill_jit = jax.jit(model.prefill)
+        self._decode_jit = jax.jit(model.decode_step)
+
+    # -- variant management (model-size / quantization knob) --------------
+    def add_variant(self, name: str, model: Model, params: Any) -> None:
+        self.variants[name] = (model, params)
+
+    def set_variant(self, name: str) -> None:
+        """Reloading a different model variant (costs a pause, paper §4.3)."""
+        model, params = self.variants[name]
+        self.model = model
+        self.knobs.variant = name
+        self.pool = CachePool(model, self.pool.n_slots, self.max_seq)
+        self.active.clear()
+        self._prefill_jit = jax.jit(model.prefill)
+        self._decode_jit = jax.jit(model.decode_step)
+
+    @property
+    def params(self):
+        return self.variants[self.knobs.variant][1]
+
+    # -- request lifecycle -------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self, now: float) -> None:
+        while (self.queue and self.pool.has_free()
+               and len(self.active) < self.knobs.max_batch
+               and not self.knobs.paused):
+            req = self.queue.pop(0)
+            prompt = jnp.asarray([req.prompt], jnp.int32)
+            logits, cache = self._prefill_jit(self.params, prompt)
+            self.stats.prefill_tokens += len(req.prompt)
+            tok = int(jnp.argmax(logits[0, : self.model.cfg.vocab_size]))
+            self.pool.insert(req.req_id, cache, len(req.prompt))
+            req.output.append(tok)
+            req.first_token_s = now
+            self.active[req.req_id] = req
+
+    def step(self, now: float | None = None) -> int:
+        """One scheduler iteration: admit + one decode step for all actives.
+
+        Returns number of decode tokens produced.
+        """
+        t0 = time.perf_counter()
+        now = now if now is not None else t0
+        self._admit(now)
+        if not self.active:
+            return 0
+        slots = {rid: self.pool.slot_of[rid] for rid in self.active}
+        tokens = [0] * self.pool.n_slots
+        for rid, req in self.active.items():
+            tokens[slots[rid]] = req.output[-1]
+        positions = self.pool.positions()
+        logits, self.pool.cache = self._decode_jit(
+            self.params, self.pool.cache,
+            jnp.asarray(tokens, jnp.int32), positions)
+        nxt = jnp.argmax(logits[:, : self.model.cfg.vocab_size], axis=-1)
+        produced = 0
+        finished = []
+        for rid, req in list(self.active.items()):
+            s = slots[rid]
+            tok = int(nxt[s])
+            req.output.append(tok)
+            produced += 1
+            full = self.pool.lengths[s] + 1 >= self.max_seq
+            if (len(req.output) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id) or full):
+                req.finish_s = now
+                finished.append(rid)
+        self.pool.advance(list(slots.values()))
+        for rid in finished:
+            self.stats.completed.append(self.active.pop(rid))
+            self.pool.release(rid)
+        self.stats.decode_tokens += produced
+        # simulated frequency knob: a capped clock stretches wall time
+        self.stats.step_times.append((time.perf_counter() - t0)
+                                     / max(self.knobs.freq_scale, 1e-3))
+        return produced
+
+    def run(self, *, max_steps: int = 10_000) -> EngineStats:
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self.step(now=float(steps))
+            steps += 1
+        return self.stats
+
+    # -- goodput (paper §3.3) ----------------------------------------------
+    def goodput(self, *, ttft_slo: float, tbt_slo: float) -> float:
+        """Tokens/s over completed requests meeting both SLOs (times are in
+        scheduler-step units when run() supplies logical `now`)."""
+        good = 0
+        t_max = 1e-9
+        for r in self.stats.completed:
+            t_max = max(t_max, r.finish_s or 0.0)
+            if (r.ttft() or 0) <= ttft_slo and (r.tbt() or 0) <= tbt_slo:
+                good += len(r.output)
+        return good / t_max

@@ -1,0 +1,62 @@
+"""Slot-based KV-cache pool for continuous batching.
+
+One pre-allocated decode cache (leaves stacked (L, SLOTS, ...)); prefill
+results for a single request are inserted into a free slot; freed slots are
+recycled.  Works for every cache family (GQA k/v, MLA latent, SWA ring,
+mamba/rwkv state) because insertion is a structural tree surgery on the
+batch dim (+ sequence prefix where one exists).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+
+
+class CachePool:
+    def __init__(self, model: Model, n_slots: int, max_seq: int):
+        self.model = model
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.cache = model.init_cache(n_slots, max_seq)
+        self.lengths = [0] * n_slots          # tokens written per slot
+        self.free = list(range(n_slots))
+        self.slot_of: dict[int, int] = {}      # req_id -> slot
+
+    def has_free(self) -> bool:
+        return bool(self.free)
+
+    def insert(self, req_id: int, prefill_cache: Any, prompt_len: int) -> int:
+        """Copy a single-request prefill cache (batch dim 1) into a slot."""
+        slot = self.free.pop()
+
+        def put_leaf(dst, src):
+            if dst.ndim >= 3 and src.shape[2:] != dst.shape[2:]:
+                # sequence-prefix insert (e.g. k: (L,1,S_prompt,K,hd))
+                return jax.lax.dynamic_update_slice(
+                    dst, src.astype(dst.dtype),
+                    (0, slot) + (0,) * (src.ndim - 2))
+            return dst.at[:, slot].set(src.astype(dst.dtype)[:, 0])
+
+        self.cache = jax.tree.map(put_leaf, self.cache, prefill_cache)
+        self.lengths[slot] = prompt_len
+        self.slot_of[req_id] = slot
+        return slot
+
+    def release(self, req_id: int) -> None:
+        slot = self.slot_of.pop(req_id)
+        self.lengths[slot] = 0
+        self.free.append(slot)
+
+    def positions(self) -> jnp.ndarray:
+        """Next write position per slot (parked slots write at 0, which is
+        always overwritten by the next prefill insert)."""
+        return jnp.asarray([self.lengths[s] if self.lengths[s] else 0
+                            for s in range(self.n_slots)], jnp.int32)
+
+    def advance(self, active_slots: list) -> None:
+        for s in active_slots:
+            self.lengths[s] += 1

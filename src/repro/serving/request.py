@@ -1,0 +1,37 @@
+"""Inference request / response records."""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+_ids = itertools.count()
+
+
+@dataclass
+class Request:
+    prompt: list                 # token ids
+    max_new_tokens: int = 32
+    customer: str = "anon"       # KV-cache affinity key (paper §4.5 LB rule 1)
+    arrival_s: float = 0.0
+    req_id: int = field(default_factory=lambda: next(_ids))
+    eos_id: int | None = None
+
+    # filled during serving
+    first_token_s: float | None = None
+    finish_s: float | None = None
+    output: list = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.finish_s is not None
+
+    def ttft(self) -> float | None:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+    def tbt(self) -> float | None:
+        """Mean time between output tokens."""
+        if self.finish_s is None or len(self.output) < 2:
+            return None
+        return (self.finish_s - self.first_token_s) / (len(self.output) - 1)

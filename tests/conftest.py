@@ -1,0 +1,7 @@
+import os
+import sys
+
+# keep the default 1-device view for smoke tests/benches (the dry-run sets
+# its own 512-device flag in-process before importing jax)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,123 @@
+"""Per-kernel allclose vs the pure-jnp oracle, swept over shapes/dtypes.
+All kernels run in interpret mode (exact kernel-body execution on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def arr(rng, *s, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(s), dtype)
+
+
+@pytest.mark.parametrize("B,H,K,S,D,dtype", [
+    (1, 4, 4, 128, 64, jnp.float32),     # MHA
+    (2, 8, 2, 256, 64, jnp.float32),     # GQA 4:1
+    (1, 4, 1, 128, 128, jnp.float32),    # MQA
+    (1, 2, 2, 128, 64, jnp.bfloat16),    # bf16 inputs
+])
+def test_flash_attention_sweep(B, H, K, S, D, dtype):
+    rng = np.random.default_rng(B * 100 + H)
+    q, k, v = arr(rng, B, H, S, D, dtype=dtype), arr(rng, B, K, S, D, dtype=dtype), \
+        arr(rng, B, K, S, D, dtype=dtype)
+    o = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    o_ref = ref.flash_attention_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_windowed():
+    rng = np.random.default_rng(7)
+    q, k, v = (arr(rng, 1, 4, 256, 64) for _ in range(3))
+    o = ops.flash_attention(q, k, v, window=64, block_q=64, block_k=64)
+    o_ref = ref.flash_attention_ref(q, k, v, window=64)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("B,H,K,S,D", [
+    (2, 8, 2, 256, 64),
+    (1, 4, 4, 128, 128),
+    (3, 4, 1, 512, 64),
+])
+def test_decode_attention_sweep(B, H, K, S, D):
+    rng = np.random.default_rng(B + S)
+    q = arr(rng, B, H, D)
+    k, v = arr(rng, B, S, K, D), arr(rng, B, S, K, D)
+    pos = jnp.asarray(rng.integers(0, S, B), jnp.int32)
+    o = ops.decode_attention(q, k, v, pos, block_k=64)
+    o_ref = ref.decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=1e-5)
+
+
+def test_decode_attention_masks_future():
+    """Only cache entries <= position may contribute."""
+    rng = np.random.default_rng(0)
+    q = arr(rng, 1, 2, 32)
+    k, v = arr(rng, 1, 128, 2, 32), arr(rng, 1, 128, 2, 32)
+    pos = jnp.asarray([5], jnp.int32)
+    o1 = ops.decode_attention(q, k, v, pos, block_k=32)
+    k2 = k.at[:, 6:].set(999.0)  # poison the future
+    v2 = v.at[:, 6:].set(999.0)
+    o2 = ops.decode_attention(q, k2, v2, pos, block_k=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+
+
+@pytest.mark.parametrize("B,T,H,D,bt", [
+    (1, 64, 2, 32, 16),
+    (2, 128, 4, 64, 64),
+])
+def test_rwkv6_wkv_sweep(B, T, H, D, bt):
+    rng = np.random.default_rng(T)
+    r, k, v = (arr(rng, B, T, H, D) for _ in range(3))
+    w = jnp.asarray(rng.uniform(0.8, 0.999, (B, T, H, D)), jnp.float32)
+    u, s0 = arr(rng, H, D), arr(rng, B, H, D, D)
+    y, sf = ops.rwkv6_wkv(r, k, v, w, u, s0, block_t=bt)
+    y_ref, sf_ref = ref.rwkv6_wkv_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sf_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_rwkv6_state_carry():
+    """Running two chunked calls == one long call (state handoff exact)."""
+    rng = np.random.default_rng(3)
+    B, T, H, D = 1, 64, 2, 32
+    r, k, v = (arr(rng, B, T, H, D) for _ in range(3))
+    w = jnp.asarray(rng.uniform(0.9, 0.999, (B, T, H, D)), jnp.float32)
+    u = arr(rng, H, D)
+    s0 = jnp.zeros((B, H, D, D))
+    y_full, s_full = ops.rwkv6_wkv(r, k, v, w, u, s0, block_t=32)
+    y1, s1 = ops.rwkv6_wkv(r[:, :32], k[:, :32], v[:, :32], w[:, :32], u, s0,
+                           block_t=32)
+    y2, s2 = ops.rwkv6_wkv(r[:, 32:], k[:, 32:], v[:, 32:], w[:, 32:], u, s1,
+                           block_t=32)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=1e-4)
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 256, 128), (256, 512, 256)])
+def test_int8_matmul_exact(M, K, N):
+    rng = np.random.default_rng(M)
+    xq = jnp.asarray(rng.integers(-127, 128, (M, K)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-127, 128, (K, N)), jnp.int8)
+    sx = jnp.asarray(rng.uniform(0.01, 0.1, (M, 1)), jnp.float32)
+    sw = jnp.asarray(rng.uniform(0.01, 0.1, (1, N)), jnp.float32)
+    o = ops.int8_matmul(xq, wq, sx, sw)
+    o_ref = ref.int8_matmul_ref(xq, wq, sx, sw)
+    np.testing.assert_array_equal(np.asarray(o, np.float32),
+                                  np.asarray(o_ref, np.float32))
+
+
+def test_int8_quantized_matmul_error_bound():
+    """w8a8 quantization error stays within a few percent of the f32 GEMM."""
+    rng = np.random.default_rng(1)
+    x, w = arr(rng, 128, 256), arr(rng, 256, 128)
+    o = np.asarray(ops.int8_matmul_quantized(x, w), np.float32)
+    o_ref = np.asarray(x @ w, np.float32)
+    rel = np.abs(o - o_ref).mean() / np.abs(o_ref).mean()
+    assert rel < 0.02, rel

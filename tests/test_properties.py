@@ -1,0 +1,112 @@
+"""Hypothesis property-based tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis.hlo_cost import HloModuleCost, _shape_info
+from repro.core.power import PowerModel
+from repro.core.router import TapasRouter
+from repro.core.datacenter import Datacenter, DCConfig
+from repro.core.thermal import ThermalModel
+from repro.kernels.int8_matmul import quantize_cols, quantize_rows
+
+_dc = Datacenter(DCConfig(n_rows=2, racks_per_row=3, servers_per_rack=2))
+_th = ThermalModel.calibrate(_dc)
+_pm = PowerModel.calibrate(_dc)
+
+
+@settings(max_examples=40, deadline=None)
+@given(demand=st.floats(0.0, 50.0),
+       caps=st.lists(st.floats(0.0, 4.0), min_size=1, max_size=12),
+       risks=st.lists(st.floats(0.0, 1.0), min_size=1, max_size=12))
+def test_router_invariants(demand, caps, risks):
+    n = min(len(caps), len(risks))
+    cap = np.asarray(caps[:n])
+    risk = np.asarray(risks[:n])
+    d = TapasRouter().route(demand, cap, risk)
+    # conservation: everything routed or accounted as unserved
+    np.testing.assert_allclose(d.load.sum() + d.unserved, demand,
+                               rtol=1e-5, atol=1e-5)
+    assert (d.load >= -1e-9).all()
+    assert (d.load <= cap + 1e-6).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(t_out=st.floats(-20.0, 45.0), load=st.floats(0.0, 1.0),
+       d_out=st.floats(0.0, 10.0), d_load=st.floats(0.0, 0.5))
+def test_thermal_monotone(t_out, load, d_out, d_load):
+    t1 = np.asarray(_th.inlet_temp(t_out, load))
+    t2 = np.asarray(_th.inlet_temp(t_out + d_out, min(load + d_load, 1.0)))
+    assert (t2 >= t1 - 1e-6).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(u=st.floats(0.0, 1.0), du=st.floats(0.0, 0.5))
+def test_power_monotone(u, du):
+    s = _dc.n_servers
+    p1 = np.asarray(_pm.server_power(np.full((s, 8), u)))
+    p2 = np.asarray(_pm.server_power(np.full((s, 8), min(u + du, 1.0))))
+    assert (p2 >= p1 - 1e-6).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(limit=st.floats(60.0, 100.0))
+def test_thermal_inversion_safe(limit):
+    inlet = np.asarray(_th.inlet_temp(30.0, 0.5))
+    u = np.asarray(_th.max_util_for_temp(inlet, limit))
+    assert ((u >= 0) & (u <= 1)).all()
+    t = np.asarray(_th.gpu_temp(inlet, np.repeat(u[:, None], 8, 1)))
+    hot = u > 0  # if util is clamped to 0, temp may exceed limit at idle
+    assert (t.max(axis=1)[hot & (u < 1.0)[...]] <= limit + 1e-3).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(2, 40), cols=st.integers(2, 40), seed=st.integers(0, 99))
+def test_int8_quantize_roundtrip(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((rows, cols)).astype(np.float32)
+    xq, s = quantize_rows(x)
+    back = np.asarray(xq, np.float32) * np.asarray(s)
+    err = np.abs(back - x).max()
+    assert err <= np.abs(x).max() / 127.0 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 8), n=st.integers(1, 8), k=st.integers(1, 8),
+       trips=st.integers(1, 50))
+def test_hlo_parser_scales_loops(m, n, k, trips):
+    """Synthetic HLO: dot inside a while body scales with trip count."""
+    hlo = f"""
+%body (p: (s32[], f32[{m},{k}], f32[{k},{n}])) -> (s32[], f32[{m},{k}], f32[{k},{n}]) {{
+  %p = (s32[], f32[{m},{k}], f32[{k},{n}]) parameter(0)
+  %a = f32[{m},{k}]{{1,0}} get-tuple-element(%p), index=1
+  %b = f32[{k},{n}]{{1,0}} get-tuple-element(%p), index=2
+  %d = f32[{m},{n}]{{1,0}} dot(%a, %b), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+  %c = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[{m},{k}], f32[{k},{n}]) tuple(%c, %a, %b)
+}}
+
+%cond (p: (s32[], f32[{m},{k}], f32[{k},{n}])) -> pred[] {{
+  %p = (s32[], f32[{m},{k}], f32[{k},{n}]) parameter(0)
+  %c = s32[] get-tuple-element(%p), index=0
+  %k = s32[] constant({trips})
+  ROOT %lt = pred[] compare(%c, %k), direction=LT
+}}
+
+ENTRY %main (x: f32[{m},{k}], y: f32[{k},{n}]) -> f32[] {{
+  %x = f32[{m},{k}]{{1,0}} parameter(0)
+  %y = f32[{k},{n}]{{1,0}} parameter(1)
+  %init = (s32[], f32[{m},{k}], f32[{k},{n}]) tuple(%x, %x, %y)
+  %w = (s32[], f32[{m},{k}], f32[{k},{n}]) while(%init), condition=%cond, body=%body, backend_config={{"known_trip_count":{{"n":"{trips}"}}}}
+  ROOT %r = f32[] constant(0)
+}}
+"""
+    cost = HloModuleCost(hlo).cost()
+    dot_flops = 2.0 * m * n * k * trips
+    # the loop condition's compare costs 1 flop/trip in our accounting
+    assert dot_flops <= cost.flops <= dot_flops + 2 * trips + 4
+
+
+def test_shape_info_tuple():
+    b, e = _shape_info("(s32[], f32[2,3]{1,0}, bf16[4])")
+    assert b == 4 + 24 + 8
+    assert e == 1 + 6 + 4

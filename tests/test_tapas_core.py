@@ -1,0 +1,279 @@
+"""TAPAS control-plane behaviour: thermal/power models (Eqs. 1-4),
+allocator rules, router filtering, configurator, failures, oversubscription."""
+import numpy as np
+import pytest
+
+from repro.core import profiles as P
+from repro.core.allocator import AllocatorState, BaselineAllocator, TapasAllocator
+from repro.core.configurator import InstanceConfigurator
+from repro.core.datacenter import Datacenter, DCConfig, scale_datacenter
+from repro.core.power import PowerModel, capping_factors, row_power
+from repro.core.router import BaselineRouter, TapasRouter
+from repro.core.simulator import (BASELINE, TAPAS, ClusterSim, FailureEvent,
+                                  SimConfig)
+from repro.core.thermal import ThermalModel, outside_temperature
+from repro.core.traces import VMSpec, generate_workload, iaas_util
+
+
+@pytest.fixture(scope="module")
+def dc():
+    return Datacenter(DCConfig(n_rows=4, racks_per_row=5, servers_per_rack=4))
+
+
+@pytest.fixture(scope="module")
+def thermal(dc):
+    return ThermalModel.calibrate(dc)
+
+
+@pytest.fixture(scope="module")
+def power(dc):
+    return PowerModel.calibrate(dc)
+
+
+# ---------------- Eq. 1-3 ----------------
+
+def test_inlet_floor_below_15C(thermal):
+    """Cooling holds the 18 °C floor when it's cold outside (humidity)."""
+    cold = np.asarray(thermal.inlet_temp(5.0, 0.5))
+    colder = np.asarray(thermal.inlet_temp(-10.0, 0.5))
+    np.testing.assert_allclose(cold, colder)
+    assert (cold >= 18.0).all()
+
+
+def test_inlet_monotone_in_outside_and_load(thermal):
+    t1 = np.asarray(thermal.inlet_temp(18.0, 0.2))
+    t2 = np.asarray(thermal.inlet_temp(24.0, 0.2))
+    t3 = np.asarray(thermal.inlet_temp(24.0, 0.9))
+    assert (t2 > t1).all()
+    assert (t3 > t2).all()
+
+
+def test_inlet_compressed_above_25C(thermal):
+    """Mechanical assist kicks in: slope above 25 °C < slope in 15-25 °C."""
+    s_mid = np.asarray(thermal.inlet_temp(24.0, 0.5)) - \
+        np.asarray(thermal.inlet_temp(23.0, 0.5))
+    s_hot = np.asarray(thermal.inlet_temp(33.0, 0.5)) - \
+        np.asarray(thermal.inlet_temp(32.0, 0.5))
+    assert (s_hot < s_mid + 1e-6).all()
+
+
+def test_gpu_temp_heterogeneity(dc, thermal):
+    """Per-server spread up to ~10 °C; even chips cooler (Fig. 8/9)."""
+    inlet = np.asarray(thermal.inlet_temp(30.0, 0.7))
+    t = np.asarray(thermal.gpu_temp(inlet, np.ones((dc.n_servers, 8))))
+    spread = t.max(axis=1) - t.min(axis=1)
+    assert spread.max() > 8.0
+    even = t[:, ::2].mean()
+    odd = t[:, 1::2].mean()
+    assert even < odd
+
+
+def test_gpu_temp_inversion(dc, thermal):
+    inlet = np.asarray(thermal.inlet_temp(28.0, 0.5))
+    u = np.asarray(thermal.max_util_for_temp(inlet, 85.0))
+    t = np.asarray(thermal.gpu_temp(inlet, np.repeat(u[:, None], 8, 1)))
+    assert (t.max(axis=1) <= 85.0 + 1e-3).all()
+
+
+def test_airflow_linear_bounds(thermal):
+    a0 = float(np.asarray(thermal.airflow(np.asarray([0.0])))[0])
+    a1 = float(np.asarray(thermal.airflow(np.asarray([1.0])))[0])
+    assert a0 == pytest.approx(thermal.airflow_idle)
+    assert a1 == pytest.approx(thermal.airflow_max)
+
+
+# ---------------- Eq. 4 ----------------
+
+def test_power_idle_and_peak(dc, power):
+    p0 = np.asarray(power.server_power(np.zeros((dc.n_servers, 8))))
+    p1 = np.asarray(power.server_power(np.ones((dc.n_servers, 8))))
+    assert (p0 >= 0.9 * dc.cfg.hw.idle_power_w).all()
+    assert (p1 <= 1.1 * dc.cfg.hw.peak_power_w).all()
+    assert (p1 > p0).all()
+
+
+def test_power_inversion(dc, power):
+    budget = 0.7 * dc.cfg.hw.peak_power_w
+    u = np.asarray(power.max_util_for_power(budget))
+    p = np.asarray(power.server_power(np.repeat(u[:, None], 8, 1)))
+    assert (p <= budget * 1.02).all()
+
+
+def test_capping_brings_rows_under_limit(dc, power):
+    util = np.full((dc.n_servers, 8), 0.95)
+    p = np.asarray(power.server_power(util))
+    limits = dc.row_sum(p) * 0.8  # force 25% overshoot
+    f = np.asarray(capping_factors(dc, p, limits, power))
+    assert (f < 1.0).any()
+    p2 = np.asarray(power.server_power(util * f[:, None]))
+    assert (dc.row_sum(p2) <= limits * 1.1).all()
+
+
+# ---------------- allocator ----------------
+
+def test_allocator_prefers_cool_for_iaas(dc, thermal, power):
+    st = AllocatorState.empty(dc, thermal, power)
+    alloc = TapasAllocator(seed=0)
+    groups = alloc._temp_groups(st)
+    vm = VMSpec(0, "iaas", "custA", 0.0, 100.0, 1.0)
+    srv = alloc.place(st, vm)
+    assert groups[srv] == 0  # coldest third
+
+
+def test_allocator_saas_safe_servers_only(dc, thermal, power):
+    st = AllocatorState.empty(dc, thermal, power)
+    alloc = TapasAllocator(seed=0)
+    vm = VMSpec(1, "saas", "ep0", 0.0, 100.0, 1.0)
+    srv = alloc.place(st, vm)
+    t_pred = alloc._peak_temp(st, 0.95)
+    if (t_pred <= thermal.gpu_limit - 1.0).any():
+        assert t_pred[srv] <= thermal.gpu_limit - 1.0 + 1e-6
+
+
+def test_allocator_fills_cluster(dc, thermal, power):
+    st = AllocatorState.empty(dc, thermal, power)
+    alloc = BaselineAllocator(seed=0)
+    placed = 0
+    for i in range(dc.n_servers + 5):
+        vm = VMSpec(i, "iaas", "c", 0.0, 1.0, 0.5)
+        if alloc.place(st, vm) is not None:
+            placed += 1
+    assert placed == dc.n_servers  # never double-books
+
+
+# ---------------- router ----------------
+
+def test_router_conservation():
+    r = TapasRouter()
+    cap = np.asarray([1.0, 1.0, 1.0, 1.0])
+    risk = np.asarray([0.0, 0.2, 0.9, 0.1])
+    d = r.route(2.5, cap, risk)
+    assert d.load.sum() + d.unserved == pytest.approx(2.5)
+    assert (d.load <= cap + 1e-9).all()
+    assert (d.load >= 0).all()
+
+
+def test_router_avoids_risky_when_possible():
+    r = TapasRouter()
+    cap = np.asarray([1.0, 1.0, 1.0, 1.0])
+    risk = np.asarray([0.9, 0.0, 0.0, 0.0])
+    d = r.route(2.0, cap, risk)
+    assert d.load[0] == pytest.approx(0.0)  # headroom elsewhere sufficed
+    assert d.unserved == pytest.approx(0.0)
+
+
+def test_router_spills_to_risky_before_dropping():
+    r = TapasRouter()
+    cap = np.asarray([1.0, 1.0])
+    risk = np.asarray([0.9, 0.9])
+    d = r.route(1.5, cap, risk)
+    assert d.load.sum() == pytest.approx(1.5)  # perf beats risk if queueing
+
+
+def test_baseline_router_uniform():
+    r = BaselineRouter()
+    d = r.route(2.0, np.ones(4), np.zeros(4))
+    np.testing.assert_allclose(d.load, 0.5)
+
+
+# ---------------- configurator ----------------
+
+def test_configurator_respects_caps():
+    c = InstanceConfigurator()
+    st = c.decide(0, power_cap=0.7, temp_cap=0.7)
+    assert st.entry.power <= 0.7 + 1e-9
+    assert st.entry.temp <= 0.7 + 1e-9
+    assert st.entry.quality >= 1.0 - 1e-9  # no quality loss outside emergency
+
+
+def test_configurator_reload_is_last_resort():
+    c = InstanceConfigurator()
+    st0 = c.decide(0, power_cap=1.0, temp_cap=1.35)
+    st = c.decide(0, power_cap=0.85, temp_cap=1.0)
+    # a frequency/batch tweak (no reload) must be preferred when feasible
+    assert not st.current.needs_reload_from(st0.current)
+
+
+def test_configurator_emergency_trades_quality():
+    c = InstanceConfigurator()
+    # tight caps AND real load to sustain: no-reload 70b configs can't hold
+    # the goodput, so the emergency engages a smaller/quantized variant
+    st = c.decide(1, power_cap=0.35, temp_cap=0.6, emergency=True,
+                  min_goodput=1.2)
+    assert st.entry.power <= 0.35 + 1e-9
+    assert st.entry.quality < 1.0  # smaller/quantized model engaged
+    assert st.entry.goodput >= 1.0  # throughput held (paper Table 2)
+
+
+def test_pareto_frontier_is_subset_and_nondominated():
+    entries = P.build_profile()
+    front = P.pareto_frontier(entries)
+    assert 0 < len(front) <= len(entries)
+    for e in front:
+        for o in entries:
+            dominates = (o.goodput >= e.goodput and o.power <= e.power
+                         and o.temp <= e.temp and o.quality >= e.quality
+                         and (o.goodput, o.power, o.temp, o.quality)
+                         != (e.goodput, e.power, e.temp, e.quality))
+            assert not dominates
+
+
+# ---------------- end-to-end policies ----------------
+
+@pytest.fixture(scope="module")
+def sim_pair():
+    # stressed operating point (peak hours covered): TAPAS's advantage only
+    # exists under pressure — when idle it deliberately uses warm headroom
+    dc_cfg = DCConfig(n_rows=4, racks_per_row=5, servers_per_rack=4)
+    kw = dict(dc=dc_cfg, horizon_h=18.0, tick_min=10.0, seed=2,
+              occupancy=0.95, demand_scale=0.98)
+    base = ClusterSim(SimConfig(policy=BASELINE, **kw)).run()
+    tap = ClusterSim(SimConfig(policy=TAPAS, **kw)).run()
+    return base, tap
+
+
+def test_tapas_reduces_peaks(sim_pair):
+    base, tap = sim_pair
+    # direction must hold under stress; calibrated magnitudes are validated
+    # in benchmarks/ (Fig. 19/20)
+    assert tap.thermal_events <= base.thermal_events
+    if base.thermal_events > 0:
+        assert tap.max_gpu_temp.max() <= base.max_gpu_temp.max() + 0.5
+
+
+def test_tapas_preserves_service(sim_pair):
+    base, tap = sim_pair
+    assert tap.unserved_frac <= max(0.05, base.unserved_frac + 0.02)
+    assert tap.mean_quality >= 0.97  # no quality loss under normal operation
+
+
+def test_ups_failure_drill_caps_capacity():
+    dc_cfg = DCConfig(n_rows=4, racks_per_row=5, servers_per_rack=4)
+    ev = FailureEvent(kind="ups", start_h=6.0, end_h=8.0)
+    base = ClusterSim(SimConfig(dc=dc_cfg, horizon_h=10.0, tick_min=10.0,
+                                seed=3, policy=BASELINE,
+                                failures=(ev,))).run()
+    clean = ClusterSim(SimConfig(dc=dc_cfg, horizon_h=10.0, tick_min=10.0,
+                                 seed=3, policy=BASELINE)).run()
+    # baseline must cap more during a UPS failure than without one
+    assert base.power_events >= clean.power_events
+    assert base.iaas_perf_impact >= clean.iaas_perf_impact
+
+
+def test_oversubscription_scaling():
+    cfg = DCConfig(n_rows=4, racks_per_row=5, servers_per_rack=4)
+    scaled = scale_datacenter(cfg, 0.4)
+    assert scaled.n_servers > cfg.n_servers
+    dc0, dc1 = Datacenter(cfg), Datacenter(scaled)
+    # provisioned envelopes unchanged by oversubscription
+    np.testing.assert_allclose(dc1.prov_row_power_w, dc0.prov_row_power_w,
+                               rtol=1e-6)
+
+
+def test_traces_deterministic():
+    w1 = generate_workload(n_servers=40, horizon_h=24.0, seed=5)
+    w2 = generate_workload(n_servers=40, horizon_h=24.0, seed=5)
+    assert [v.vm_id for v in w1.vms] == [v.vm_id for v in w2.vms]
+    v = w1.vms[-1]
+    t = np.arange(0, 24.0, 0.5)
+    np.testing.assert_allclose(iaas_util(v, t, seed=5), iaas_util(v, t, seed=5))
