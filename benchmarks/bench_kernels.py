@@ -26,11 +26,34 @@ def main(quick: bool = True) -> list:
     q1 = arr(B, H, D)
     pos = jnp.asarray([200], jnp.int32)
     kd, vd = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
-    o, us = timed(lambda: np.asarray(
+
+    def best_of(fn, n=5):
+        fn()  # warm the jit cache so timings are steady-state
+        return min(timed(fn)[1] for _ in range(n))
+
+    o = np.asarray(ops.decode_attention(q1, kd, vd, pos, block_k=64))
+    us = best_of(lambda: np.asarray(
         ops.decode_attention(q1, kd, vd, pos, block_k=64)))
     err = float(jnp.max(jnp.abs(o - ref.decode_attention_ref(q1, kd, vd, pos))))
     rows.append(emit("kernel_decode_attention", us,
                      {"max_err": err, "ok": err < 1e-4}))
+
+    # paged decode over the same context: S=256 split into 64-token blocks
+    bs = 64
+    t_blk = S // bs
+    kp = jnp.concatenate([jnp.zeros((1, bs, K, D), kd.dtype),
+                          kd.reshape(t_blk, bs, K, D)])
+    vp = jnp.concatenate([jnp.zeros((1, bs, K, D), vd.dtype),
+                          vd.reshape(t_blk, bs, K, D)])
+    bt = jnp.arange(1, t_blk + 1, dtype=jnp.int32)[None, :]
+    op = np.asarray(ops.paged_decode_attention(q1, kp, vp, bt, pos))
+    us_p = best_of(lambda: np.asarray(
+        ops.paged_decode_attention(q1, kp, vp, bt, pos)))
+    err = float(np.max(np.abs(op - o)))       # must equal the dense result
+    ratio = us_p / max(us, 1e-9)
+    rows.append(emit("kernel_paged_decode_attention", us_p,
+                     {"max_err_vs_dense": err, "time_vs_dense": round(ratio, 3),
+                      "ok": err < 1e-4 and ratio <= 1.10}))
 
     T, Hn, Dn = 128, 2, 32
     r, kk, vv = arr(B, T, Hn, Dn), arr(B, T, Hn, Dn), arr(B, T, Hn, Dn)

@@ -1,60 +1,52 @@
-"""Paper Figs. 15–16: instance profiles + Pareto frontier, cross-checked
-against the real serving engine (reduced-size llama2) for relative goodput
-vs batch size."""
+"""Paper Figs. 15–16: instance profiles + Pareto frontier, with the profile
+table calibrated from the REAL serving engine (paged-KV, reduced-size
+llama2) via ``profiles.measure_from_engine`` — the offline profiling phase
+the paper runs on hardware."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from benchmarks.common import emit, save, timed
-from repro.configs import get_config
 from repro.core import profiles as P
-from repro.models import build_model, local_plan
-from repro.serving import Engine, EngineKnobs, Request
-
-
-def engine_goodput_vs_batch(batches=(1, 2, 4)) -> dict:
-    """Relative engine throughput at different max-batch knobs (the
-    batch-size column of Fig. 15b at smoke scale)."""
-    cfg = get_config("llama2-7b").smoke_config()
-    model = build_model(cfg, local_plan(param_dtype=jnp.bfloat16))
-    params = model.init(jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
-    out = {}
-    for b in batches:
-        eng = Engine(model, params, max_seq=96, n_slots=max(batches),
-                     knobs=EngineKnobs(max_batch=b))
-        for i in range(8):
-            eng.submit(Request(prompt=list(rng.integers(0, cfg.vocab_size, 8)),
-                               max_new_tokens=12))
-        stats = eng.run()
-        steps = max(len(stats.step_times), 1)
-        out[b] = stats.decode_tokens / steps
-    base = out[batches[0]]
-    return {f"batch_{b}": round(v / base, 2) for b, v in out.items()}
 
 
 def main(quick: bool = True) -> list:
     rows = []
-    entries, us = timed(P.build_profile)
-    front = P.pareto_frontier(entries)
-    # paper claims: model size dominates the quality axis; frontier exists
-    best = max(entries, key=lambda e: e.goodput)
-    derived = {
-        "config_points": len(entries),
-        "pareto_points": len(front),
-        "best_goodput_cfg": f"{best.cfg.size}/tp{best.cfg.tp}/b{best.cfg.batch}",
-        "quality_7b_vs_70b": round(
-            next(e.quality for e in entries if e.cfg.size == "7b"
-                 and e.cfg.quant == "bf16"), 2),
-    }
-    rows.append(emit("profiles_pareto", us, derived))
+    # --- engine-measured profiling sweep (max_batch x freq x variant) ----
+    mp, us = timed(P.measure_from_engine,
+                   batches=(1, 2, 4), freqs=(0.6, 0.8, 1.0),
+                   n_requests=6, max_new=8)
+    cal = mp.calibration
+    effs = {f"batch_eff_{k}": round(v, 3) for k, v in cal["batch_eff"].items()}
+    rows.append(emit("profiles_measured_sweep", us, {
+        "points": len(mp.rows), **effs,
+        "freq_exp": round(cal["freq_exp"], 3),
+        "size_speed_7b": round(cal["size_speed"].get("7b", 0.0), 3),
+        "monotone_batch": bool(
+            cal["batch_eff"][64] >= cal["batch_eff"][16]
+            >= cal["batch_eff"][1]),
+    }))
 
-    gp, us = timed(engine_goodput_vs_batch)
-    gp["monotone"] = bool(gp["batch_4"] >= gp["batch_1"])
-    rows.append(emit("profiles_engine_batch_knob", us, gp))
-    save("bench_profiles", {"pareto": derived, "engine": gp})
+    # --- fold measurements into the _entry physics and rebuild the table -
+    P.calibrate(mp)
+    try:
+        entries, us = timed(P.build_profile)
+        front = P.pareto_frontier(entries)
+        best = max(entries, key=lambda e: e.goodput)
+        nominal = P._entry(P.NOMINAL)
+        derived = {
+            "config_points": len(entries),
+            "pareto_points": len(front),
+            "best_goodput_cfg": f"{best.cfg.size}/tp{best.cfg.tp}/b{best.cfg.batch}",
+            "nominal_goodput": round(nominal.goodput, 3),
+            "quality_7b_vs_70b": round(
+                next(e.quality for e in entries if e.cfg.size == "7b"
+                     and e.cfg.quant == "bf16"), 2),
+            "source": P._CAL["source"],
+        }
+        rows.append(emit("profiles_pareto", us, derived))
+        save("bench_profiles", {"pareto": derived, "calibration": {
+            k: v for k, v in cal.items()}, "measured_rows": mp.rows})
+    finally:
+        P.reset_calibration()
     return rows
 
 

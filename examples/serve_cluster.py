@@ -35,7 +35,7 @@ def main() -> None:
     engines = []
     for v in range(N_VMS):
         e = Engine(model, params, max_seq=96, n_slots=4,
-                   knobs=EngineKnobs(max_batch=4))
+                   knobs=EngineKnobs(max_batch=4), paged=True, block_size=16)
         e.add_variant("small", model_small, params_small)
         engines.append(e)
 
@@ -85,7 +85,9 @@ def main() -> None:
 
     total = sum(len(e.stats.completed) for e in engines)
     variants = [e.knobs.variant for e in engines]
-    print(f"\ncompleted {total} requests; final variants: {variants}")
+    util = [round(e.pool.utilization(), 2) for e in engines]
+    print(f"\ncompleted {total} requests; final variants: {variants}; "
+          f"paged-pool utilization: {util}")
     assert total > 0
 
 

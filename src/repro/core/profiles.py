@@ -2,10 +2,15 @@
 
 The offline profiling phase measures goodput / power / peak-temperature /
 quality for every configuration point (GPU frequency, tensor parallelism,
-batch size, model size, quantization).  On real hardware this comes from
-running the serving engine; here the canonical profile is calibrated to the
-paper's published curves, and bench_profiles.py cross-checks the *relative*
-shape against our engine on reduced-size models.
+batch size, model size, quantization).  ``measure_from_engine()`` runs that
+phase for real: it sweeps the serving Engine's knobs (max_batch x
+freq_scale x variant) on a reduced-size model and turns the measured
+token rates into ``ProfileEntry`` rows; ``calibrate()`` then folds the
+measured batch efficiencies / frequency exponent / size speedups into the
+``_entry`` physics so every downstream consumer (Instance Configurator,
+ClusterSim) reads engine-measured numbers through the unchanged
+``_entry`` API.  The hand values below remain the paper-calibrated
+defaults for axes the smoke engine cannot observe (TP, quantization).
 
 Conventions: goodput normalized to the best config = 1.0; power/temp
 normalized to server TDP / temp-at-TDP = 1.0; quality in [0,1]
@@ -13,7 +18,8 @@ normalized to server TDP / temp-at-TDP = 1.0; quality in [0,1]
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import math
+from dataclasses import dataclass, field
 from itertools import product
 
 FREQS = (0.6, 0.7, 0.8, 0.9, 1.0)
@@ -31,6 +37,13 @@ _QUANT = {  # speedup, quality delta, power scale
     "bf16": (1.0, 0.0, 1.0),
     "int8": (1.45, -0.08, 0.82),
 }
+
+# paper-curve defaults, replaced by calibrate(measure_from_engine(...))
+_DEFAULT_BATCH_EFF = {1: 0.25, 16: 0.85, 64: 1.0}
+_DEFAULT_FREQ_EXP = 0.85
+_CAL: dict = {"batch_eff": dict(_DEFAULT_BATCH_EFF),
+              "freq_exp": _DEFAULT_FREQ_EXP, "size_speed": {},
+              "source": "paper-calibrated"}
 
 
 @dataclass(frozen=True)
@@ -61,19 +74,27 @@ class ProfileEntry:
     quality: float
 
 
+def _per_chip_power(util: float, freq: float, chips_frac: float = 1.0) -> float:
+    """Per-active-chip draw: static+dynamic split over frequency; work
+    concentrates (draw rises) as fewer chips share it (paper §3.3)."""
+    return util * (0.55 + 0.45 * freq ** 2.2) / chips_frac ** 0.35
+
+
 def _entry(c: ConfigPoint) -> ProfileEntry:
     size_speed, qual, intensity = _SIZE[c.size]
+    size_speed = _CAL["size_speed"].get(c.size, size_speed)
     qspeed, qqual, qpow = _QUANT[c.quant]
     # goodput: prompt phase ~ freq-sensitive (paper: prefill more sensitive);
-    # batching amortizes weights until SLO pressure at 64
-    batch_eff = {1: 0.25, 16: 0.85, 64: 1.0}[c.batch]
+    # batching amortizes weights until SLO pressure at the top knob
+    batch_eff = _CAL["batch_eff"][c.batch]
     tp_eff = {8: 1.0, 4: 0.80, 2: 0.55}[c.tp]
-    goodput = (c.freq ** 0.85) * batch_eff * tp_eff * size_speed * qspeed
+    goodput = (c.freq ** _CAL["freq_exp"]) * batch_eff * tp_eff \
+        * size_speed * qspeed
     # power: fewer active chips with lower TP lowers SERVER power; per-chip
     # power rises (work concentrates) -> temp of hottest chip up (paper §3.3)
     util = intensity * batch_eff
     chips_frac = c.tp / 8.0
-    per_chip = util * (0.55 + 0.45 * c.freq ** 2.2) / chips_frac ** 0.35
+    per_chip = _per_chip_power(util, c.freq, chips_frac)
     power = chips_frac * per_chip * qpow
     temp = min(per_chip * qpow, 1.35)
     quality = max(qual + qqual, 0.0)
@@ -138,3 +159,156 @@ def best_config(entries: list, *, power_cap: float, temp_cap: float,
 
 
 NOMINAL = ConfigPoint(freq=1.0, tp=8, batch=64, size="70b", quant="bf16")
+
+
+# ---------------------------------------------------------------------------
+# engine-measured profiles (paper's offline profiling phase, §3.3)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class MeasuredProfile:
+    """Engine-measured goodput sweep + the calibration it implies.
+
+    rows: one dict per swept knob point with the raw measured token rate;
+    entries: the same points as ProfileEntry rows (goodput normalized to
+    the best measured point, power/temp from the _entry physics driven by
+    the measured efficiencies); calibration: overrides for _entry.
+    """
+    rows: list = field(default_factory=list)
+    entries: list = field(default_factory=list)
+    calibration: dict = field(default_factory=dict)
+
+
+def _snap(value: float, grid: tuple) -> float:
+    return min(grid, key=lambda g: abs(g - value))
+
+
+def measure_from_engine(*, arch: str = "llama2-7b",
+                        batches: tuple = (1, 2, 4),
+                        freqs: tuple = (0.6, 0.8, 1.0),
+                        variants: tuple = (("full", "70b"), ("small", "7b")),
+                        n_requests: int = 8, prompt_len: int = 8,
+                        max_new: int = 10, max_seq: int = 96,
+                        seed: int = 0) -> MeasuredProfile:
+    """Run the offline profiling phase on the real serving engine.
+
+    Sweeps EngineKnobs (max_batch x freq_scale x variant) on a smoke-scale
+    model and measures decode tokens per wall-second at each point.  The
+    measured batch knobs map onto the profile's BATCHES axis by rank and
+    each engine variant onto a SIZES entry (``variants`` pairs knob name
+    with size), so the emitted ProfileEntry rows slot straight into the
+    configurator/simulator tables.  One engine per variant is built and
+    its (mutable) batch/freq knobs swept in place, so every jitted
+    prefill bucket and the decode step compile exactly once per variant.
+    """
+    if len(batches) > len(BATCHES):
+        raise ValueError(f"at most {len(BATCHES)} batch knobs map onto the "
+                         f"profile's BATCHES axis, got {batches}")
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import build_model, local_plan
+    from repro.serving import Engine, EngineKnobs, EngineStats, Request
+
+    cfg_full = get_config(arch).smoke_config()
+    cfg_small = cfg_full.replace(num_layers=1, d_ff=max(cfg_full.d_ff // 2, 8),
+                                 name=f"{cfg_full.name}-small")
+    plan = local_plan(param_dtype=jnp.bfloat16)
+    models = {"full": build_model(cfg_full, plan),
+              "small": build_model(cfg_small, plan)}
+    n_lanes = max(batches)
+    rows = []
+    for vi, (vname, size) in enumerate(variants):
+        model = models[vname]
+        params = model.init(jax.random.PRNGKey(vi))
+        eng = Engine(model, params, max_seq=max_seq, n_slots=n_lanes,
+                     knobs=EngineKnobs(max_batch=n_lanes))
+
+        def submit_load(rng):
+            for _ in range(n_requests):
+                eng.submit(Request(
+                    prompt=[int(t) for t in rng.integers(
+                        0, cfg_full.vocab_size, prompt_len)],
+                    max_new_tokens=max_new))
+
+        for batch in batches:
+            eng.knobs.max_batch = batch
+            eng.knobs.freq_scale = 1.0
+            # warmup: compile this knob point's prefill buckets + decode
+            # step so measured step times are steady-state, not jit traces
+            eng.stats = EngineStats()
+            submit_load(np.random.default_rng(seed))
+            eng.run()
+            for freq in freqs:
+                eng.knobs.freq_scale = freq
+                eng.stats = EngineStats()
+                submit_load(np.random.default_rng(seed))
+                stats = eng.run()
+                wall = max(sum(stats.step_times), 1e-9)
+                rows.append({
+                    "variant": vname, "size": size, "batch": batch,
+                    "freq": freq, "tok_per_s": stats.decode_tokens / wall,
+                    "decode_tokens": stats.decode_tokens,
+                    "preemptions": stats.preemptions,
+                })
+
+    # --- calibration: batch efficiency, freq exponent, size speedup ------
+    def rate(vname, batch, freq):
+        return next(r["tok_per_s"] for r in rows
+                    if r["variant"] == vname and r["batch"] == batch
+                    and r["freq"] == freq)
+
+    f_top = max(freqs)
+    b_top = max(batches)
+    base = variants[0][0]
+    top_rate = rate(base, b_top, f_top)
+    # measured batch knobs map onto the profile's BATCHES axis by rank,
+    # aligned at the top (the biggest measured batch defines eff = 1.0);
+    # unmeasured low knobs conservatively inherit the smallest measured eff
+    eff_of = {b: min(rate(base, b, f_top) / max(top_rate, 1e-9), 1.0)
+              for b in batches}
+    knob_of = dict(zip(sorted(batches)[::-1], BATCHES[::-1]))
+    batch_eff = {knob: min(eff_of.values()) for knob in BATCHES}
+    for b, knob in knob_of.items():
+        batch_eff[knob] = eff_of[b]
+    exps = [math.log(max(rate(base, b_top, f) / max(top_rate, 1e-9), 1e-9))
+            / math.log(f) for f in freqs if f != f_top]
+    freq_exp = float(np.clip(np.mean(exps), 0.3, 2.0)) if exps \
+        else _DEFAULT_FREQ_EXP
+    size_speed = {}
+    for vname, size in variants:
+        size_speed[size] = rate(vname, b_top, f_top) / max(top_rate, 1e-9)
+    calibration = {"batch_eff": batch_eff, "freq_exp": freq_exp,
+                   "size_speed": size_speed, "source": "engine-measured"}
+
+    # --- ProfileEntry rows for the measured points ------------------------
+    best = max(r["tok_per_s"] for r in rows)
+    entries = []
+    for r in rows:
+        c = ConfigPoint(freq=_snap(r["freq"], FREQS), tp=8,
+                        batch=knob_of[r["batch"]], size=r["size"],
+                        quant="bf16")
+        _, qual, intensity = _SIZE[c.size]
+        util = intensity * batch_eff[c.batch]
+        per_chip = _per_chip_power(util, c.freq)   # measured points run tp=8
+        entries.append(ProfileEntry(
+            c, goodput=r["tok_per_s"] / max(best, 1e-9),
+            power=min(per_chip, 1.0), temp=min(per_chip, 1.35),
+            quality=qual))
+    return MeasuredProfile(rows=rows, entries=entries,
+                           calibration=calibration)
+
+
+def calibrate(measured: MeasuredProfile) -> None:
+    """Fold engine measurements into the ``_entry`` physics so the
+    configurator and ClusterSim consume measured numbers through the
+    unchanged API (acceptance: nominal entries come from the engine)."""
+    _CAL.update(measured.calibration)
+
+
+def reset_calibration() -> None:
+    _CAL.update(batch_eff=dict(_DEFAULT_BATCH_EFF),
+                freq_exp=_DEFAULT_FREQ_EXP, size_speed={},
+                source="paper-calibrated")

@@ -10,6 +10,8 @@ policy logic is event-level Python/NumPy, mirroring the control plane.
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -127,8 +129,11 @@ class ClusterSim:
         t_out = np.asarray(outside_temperature(cfg.dc.region, t_h,
                                                seed=cfg.seed))
 
-        pending = sorted(self.work.vms, key=lambda v: v.arrival_h)
-        departures: list = []
+        # event queues: O(log n) pops instead of pop(0)/rebuild-and-remove
+        evseq = itertools.count()
+        pending = [(vm.arrival_h, next(evseq), vm) for vm in self.work.vms]
+        heapq.heapify(pending)
+        departures: list = []   # heap of (depart_h, seq, srv, vm)
         ep_servers: dict[str, list] = {e: [] for e in self.work.endpoints}
         server_ep: dict[int, str] = {}
         freq_cap = np.ones(s)           # persistent power-cap state
@@ -140,6 +145,7 @@ class ClusterSim:
         row_frac_t = np.zeros((ticks, dc.n_rows))
         th_events = pw_events = 0
         th_capped = pw_capped = 0
+        occupied_acc = 0        # occupied server-ticks, accumulated per tick
         unserved_total = demand_total = 0.0
         quality_acc = quality_w = 0.0
         iaas_impact = saas_impact = 0.0
@@ -147,24 +153,25 @@ class ClusterSim:
         for ti in range(ticks):
             now = t_h[ti]
             # -- arrivals / departures ---------------------------------
-            while pending and pending[0].arrival_h <= now:
-                vm = pending.pop(0)
+            while pending and pending[0][0] <= now:
+                _, _, vm = heapq.heappop(pending)
                 srv = self.allocator.place(self.alloc_state, vm, seed=cfg.seed)
                 if srv is not None:
-                    departures.append((vm.arrival_h + vm.lifetime_h, srv, vm))
+                    heapq.heappush(departures, (vm.arrival_h + vm.lifetime_h,
+                                                next(evseq), srv, vm))
                     if vm.kind == "saas":
                         ep_servers[vm.customer].append(srv)
                         server_ep[srv] = vm.customer
-            for dep in [d for d in departures if d[0] <= now]:
-                _, srv, vm = dep
+            while departures and departures[0][0] <= now:
+                _, _, srv, vm = heapq.heappop(departures)
                 self.alloc_state.release(srv)
                 if vm.kind == "saas" and srv in server_ep:
                     ep_servers[server_ep.pop(srv)].remove(srv)
                 self.configurator.reset(srv)
-                departures.remove(dep)
 
             kind = self.alloc_state.kind_of
             iaas_mask = kind == 1
+            occupied_acc += int((kind > 0).sum())
 
             # -- failure state -----------------------------------------
             ahu_derate = np.ones(dc.n_aisles)
@@ -192,7 +199,7 @@ class ClusterSim:
 
             # -- IaaS utilization --------------------------------------
             util_srv = np.zeros(s)
-            for _, srv, vm in departures:
+            for _, _, srv, vm in departures:
                 if vm.kind == "iaas" and self.alloc_state.vm_of[srv] == vm.vm_id:
                     util_srv[srv] = iaas_util(vm, np.asarray([now]),
                                               seed=cfg.seed)[0]
@@ -351,7 +358,9 @@ class ClusterSim:
             peak_row[ti] = float(rowf.max())
             last_util = chip_util.mean(axis=1)
 
-        occupied_ticks = max(ticks * max((kind > 0).sum(), 1), 1)
+        # normalize capped-event counts by the true occupied server-ticks
+        # (summed per tick — occupancy drifts as VMs arrive and depart)
+        occupied_ticks = max(occupied_acc, 1)
         return SimResult(
             time_h=t_h,
             max_gpu_temp=max_temp,

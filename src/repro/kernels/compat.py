@@ -1,0 +1,15 @@
+"""Version-portable aliases for the Pallas TPU API.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; the
+kernels in this package run on both spellings so the pinned container jax
+and newer toolchains compile the same source.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def tpu_compiler_params(dimension_semantics: tuple):
+    return CompilerParams(dimension_semantics=dimension_semantics)

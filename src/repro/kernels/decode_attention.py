@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -96,7 +98,6 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((H,), jnp.float32),
             pltpu.VMEM((H, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=tpu_compiler_params(("parallel", "arbitrary")),
         interpret=interpret,
     )(positions, q, k, v)

@@ -15,6 +15,8 @@ from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.int8_matmul import (int8_matmul as _int8_mm,
                                        quantize_cols, quantize_rows)
+from repro.kernels.paged_decode_attention import \
+    paged_decode_attention as _paged_decode
 from repro.kernels.rwkv6_wkv import rwkv6_wkv as _wkv
 
 
@@ -37,6 +39,15 @@ def decode_attention(q, k, v, positions, *, block_k=512, interpret=None):
     if interpret is None:
         interpret = _default_interpret()
     return _decode(q, k, v, positions, block_k=block_k, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, positions, *,
+                           interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _paged_decode(q, k_pool, v_pool, block_tables, positions,
+                         interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("block_t", "interpret"))
@@ -63,6 +74,6 @@ def int8_matmul(x_q, w_q, sx, sw, *, interpret=None):
     return _int8_mm(x_q, w_q, sx, sw, interpret=interpret)
 
 
-__all__ = ["flash_attention", "decode_attention", "rwkv6_wkv",
-           "int8_matmul", "int8_matmul_quantized",
+__all__ = ["flash_attention", "decode_attention", "paged_decode_attention",
+           "rwkv6_wkv", "int8_matmul", "int8_matmul_quantized",
            "quantize_rows", "quantize_cols"]

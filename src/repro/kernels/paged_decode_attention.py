@@ -1,0 +1,123 @@
+"""Paged flash-decode — Pallas TPU kernel over a block-table KV pool.
+
+The KV cache lives in one global pool of fixed-size blocks
+(``n_blocks, block_size, K, D``); each sequence owns a per-request *block
+table* mapping its logical KV blocks to physical pool blocks (vLLM-style
+PagedAttention).  The grid walks (sequence, logical block); the physical
+block to DMA is resolved in the BlockSpec index map from the scalar-
+prefetched block table (SMEM), so the kernel body is the same running
+(m, l, acc) online softmax as the dense flash-decode in
+``decode_attention.py`` — only the gather changed.
+
+q packs all heads of one sequence into a single (H, D) MXU operand and GQA
+is computed grouped — q reshaped (K, G, D) against k (bs, K, D) — so kv is
+never expanded.  Logical blocks past the sequence's length are skipped with
+``@pl.when``; their index-map entries must still name a valid physical
+block, so callers pad unused block-table slots with 0 (the pool reserves
+block 0 as a parking block that no live sequence owns).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_sc, l_sc, acc_sc, *, scale: float,
+                         block_size: int, groups: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)          # logical block index within the sequence
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    pos = pos_ref[b]
+    k_lo = j * block_size
+
+    @pl.when(k_lo <= pos)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)      # (H, D), H = K*G
+        k = k_ref[...].astype(jnp.float32)    # (bs, K, D) — physical block
+        v = v_ref[...].astype(jnp.float32)
+        K = k.shape[1]
+        qg = q.reshape(K, groups, q.shape[-1])
+        # scores (K, G, bs)
+        s = jax.lax.dot_general(qg, k, (((2,), (2,)), ((0,), (1,))),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        s = jnp.where(kpos <= pos, s, NEG_INF)
+        sh = s.reshape(K * groups, block_size)  # (H, bs)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sh, axis=1))
+        p = jnp.exp(sh - m_new[:, None]).reshape(K, groups, block_size)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=2).reshape(-1)
+        # (K, G, bs) x (bs, K, D) -> (K, G, D)
+        o = jax.lax.dot_general(p, v, (((2,), (0,)), ((0,), (1,))),
+                                preferred_element_type=jnp.float32)
+        acc_sc[...] = acc_sc[...] * corr[:, None] + o.reshape(K * groups, -1)
+        m_sc[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        denom = jnp.maximum(l_sc[...], 1e-30)[:, None]
+        o_ref[0] = (acc_sc[...] / denom).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           block_tables: jax.Array, positions: jax.Array, *,
+                           scale: float | None = None,
+                           interpret: bool = False) -> jax.Array:
+    """One-token attention over a paged KV pool.
+
+    q: (B, H, D); k_pool/v_pool: (n_blocks, bs, K, D);
+    block_tables: (B, T) int32 physical block ids (pad unused slots with 0);
+    positions: (B,) last valid cache index per sequence -> o (B, H, D).
+    """
+    B, H, D = q.shape
+    bs, K = k_pool.shape[1], k_pool.shape[2]
+    T = block_tables.shape[1]
+    assert H % K == 0
+    groups = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    kern = functools.partial(_paged_decode_kernel, scale=scale,
+                             block_size=bs, groups=groups)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,    # block_tables, positions land in SMEM
+        grid=(B, T),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, j, bt, pos: (b, 0, 0)),
+            pl.BlockSpec((None, bs, K, D),
+                         lambda b, j, bt, pos: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((None, bs, K, D),
+                         lambda b, j, bt, pos: (bt[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, j, bt, pos: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        compiler_params=tpu_compiler_params(("parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), positions.astype(jnp.int32),
+      q, k_pool, v_pool)

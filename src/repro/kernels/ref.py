@@ -47,6 +47,20 @@ def decode_attention_ref(q, k, v, positions, *, scale=None):
     return jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, positions, *,
+                               scale=None):
+    """q: (B, H, D); k_pool/v_pool: (n_blocks, bs, K, D);
+    block_tables: (B, T); positions: (B,)."""
+    B, H, D = q.shape
+    bs, K = k_pool.shape[1], k_pool.shape[2]
+    T = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    # gather each sequence's logical KV view: (B, T*bs, K, D)
+    k = k_pool[block_tables].reshape(B, T * bs, K, D)
+    v = v_pool[block_tables].reshape(B, T * bs, K, D)
+    return decode_attention_ref(q, k, v, positions, scale=scale)
+
+
 def rwkv6_wkv_ref(r, k, v, w, u, s0):
     """r/k/v/w: (B, T, H, D); u: (H, D); s0: (B, H, D, D)."""
     def step(s, inp):

@@ -24,6 +24,13 @@ def main(argv=None) -> dict:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV pool block size (tokens)")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--paged", dest="paged", action="store_true",
+                      default=None, help="force the paged-KV pool")
+    mode.add_argument("--no-paged", dest="paged", action="store_false",
+                      help="force the legacy slot pool")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -35,7 +42,8 @@ def main(argv=None) -> dict:
     model = build_model(cfg, plan)
     params = model.init(jax.random.PRNGKey(0))
     eng = Engine(model, params, max_seq=args.max_seq, n_slots=args.slots,
-                 knobs=EngineKnobs(max_batch=args.slots))
+                 knobs=EngineKnobs(max_batch=args.slots), paged=args.paged,
+                 block_size=args.block_size)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):
@@ -47,9 +55,12 @@ def main(argv=None) -> dict:
     stats = eng.run()
     gp = eng.goodput(ttft_slo=50.0, tbt_slo=5.0)
     out = {
+        "mode": "paged" if eng.paged else "slots",
         "completed": len(stats.completed),
         "decode_tokens": stats.decode_tokens,
         "prefill_tokens": stats.prefill_tokens,
+        "prefill_batches": stats.prefill_batches,
+        "preemptions": stats.preemptions,
         "goodput_tok_per_step": round(gp, 3),
     }
     print(out)

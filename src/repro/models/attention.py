@@ -492,11 +492,11 @@ def _flash_decode_core(axis, q, k_cache, v_cache, k_new, v_new, positions,
     return o.astype(q.dtype), k_cache, v_cache
 
 
-def gqa_decode(p: Params, x: jax.Array, cache: Params, positions: jax.Array,
-               cfg: ArchConfig, plan: ShardPlan):
-    """x: (B, d) one token per sequence -> (out (B, d), new cache)."""
+def _decode_qkv(p: Params, x: jax.Array, positions: jax.Array,
+                cfg: ArchConfig, plan: ShardPlan):
+    """Shared one-token GQA projection: q (B, H, hd) + the new token's
+    real-head k/v (B, K, hd), with qk_norm/rope/padded-copy-drop applied."""
     dt = plan.compute_dtype
-    h_pad = plan.h_pad(cfg)
     q = jnp.einsum("bd,dhk->bhk", x, p["w_q"].astype(dt))
     k_new = jnp.einsum("bd,dgk->bgk", x, p["w_k"].astype(dt))
     v_new = jnp.einsum("bd,dgk->bgk", x, p["w_v"].astype(dt))
@@ -509,6 +509,15 @@ def gqa_decode(p: Params, x: jax.Array, cache: Params, positions: jax.Array,
         # decode caches store real heads; drop padded copies of the new token
         copies = plan.k_pad(cfg) // cfg.n_kv_heads
         k_new, v_new = k_new[:, ::copies], v_new[:, ::copies]
+    return q, k_new, v_new
+
+
+def gqa_decode(p: Params, x: jax.Array, cache: Params, positions: jax.Array,
+               cfg: ArchConfig, plan: ShardPlan):
+    """x: (B, d) one token per sequence -> (out (B, d), new cache)."""
+    dt = plan.compute_dtype
+    h_pad = plan.h_pad(cfg)
+    q, k_new, v_new = _decode_qkv(p, x, positions, cfg, plan)
     idx = kv_index(cfg, h_pad)
     scale = 1.0 / math.sqrt(cfg.head_dim)
 
@@ -547,6 +556,63 @@ def _swa_decode(p, q, k_new, v_new, cache, positions, cfg, plan, kv_idx, scale):
     prob = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhs,bshd->bhd", prob.astype(ve.dtype), ve)
     out = jnp.einsum("bhk,hkd->bd", o.astype(dt), p["w_o"].astype(dt))
+    return plan.constrain(out, ("batch", "embed_act"), cfg), {"k": k_c, "v": v_c}
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, positions, *,
+                    scale: float, kv_idx: jax.Array) -> jax.Array:
+    """Decode attention over a paged KV pool (XLA gather path).
+
+    q: (B, H, hd); k_pool/v_pool: (n_blocks, bs, K, hd);
+    block_tables: (B, T) physical block ids; positions: (B,).
+
+    This is the XLA-native counterpart of the Pallas
+    ``kernels/paged_decode_attention.py`` kernel: the per-sequence logical
+    view is gathered from the pool through the block table, then masked by
+    position.  On TPU the kernel resolves the same gather in its BlockSpec
+    index map and never materialises the view.
+    """
+    B, H = q.shape[:2]
+    bs, K = k_pool.shape[1], k_pool.shape[2]
+    T = block_tables.shape[1]
+    k = k_pool[block_tables].reshape(B, T * bs, K, -1)
+    v = v_pool[block_tables].reshape(B, T * bs, K, -1)
+    ke = _expand_kv(k, kv_idx, H)
+    ve = _expand_kv(v, kv_idx, H)
+    s = jnp.einsum("bhd,bshd->bhs", q, ke,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(T * bs)[None, None, :] <= positions[:, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhs,bshd->bhd", prob.astype(ve.dtype), ve,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def gqa_decode_paged(p: Params, x: jax.Array, cache: Params,
+                     positions: jax.Array, block_tables: jax.Array,
+                     cfg: ArchConfig, plan: ShardPlan):
+    """Paged-pool decode step: write the new token's KV into its block,
+    attend through the block table.  x: (B, d) -> (out (B, d), new cache).
+
+    The write touches exactly one (block, offset) slot per sequence —
+    O(active sequences), independent of pool size — and under jit with a
+    donated cache XLA updates the pool in place.
+    """
+    dt = plan.compute_dtype
+    h_pad = plan.h_pad(cfg)
+    q, k_new, v_new = _decode_qkv(p, x, positions, cfg, plan)
+    bs = cache["k"].shape[1]
+    blk = jnp.take_along_axis(block_tables, (positions // bs)[:, None],
+                              axis=1)[:, 0]
+    off = positions % bs
+    k_c = cache["k"].at[blk, off].set(k_new.astype(cache["k"].dtype))
+    v_c = cache["v"].at[blk, off].set(v_new.astype(cache["v"].dtype))
+    idx = kv_index(cfg, h_pad)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    o = paged_attention(q, k_c, v_c, block_tables, positions,
+                        scale=scale, kv_idx=idx)
+    out = jnp.einsum("bhk,hkd->bd", o, p["w_o"].astype(dt))
     return plan.constrain(out, ("batch", "embed_act"), cfg), {"k": k_c, "v": v_c}
 
 
@@ -615,6 +681,24 @@ def mla_decode(p: Params, x: jax.Array, cache: Params, positions: jax.Array,
 # ---------------------------------------------------------------------------
 # cache init
 # ---------------------------------------------------------------------------
+
+def init_paged_attn_cache(cfg: ArchConfig, plan: ShardPlan, n_blocks: int,
+                          block_size: int, dtype=jnp.bfloat16):
+    """Per-layer paged KV pool (GQA families only): one global block pool
+    shared by every sequence, indexed through per-request block tables."""
+    if cfg.rwkv or cfg.family == "hybrid" or cfg.attn_kind != "gqa":
+        raise ValueError(f"{cfg.name}: paged KV cache requires plain GQA "
+                         f"attention (got attn_kind={cfg.attn_kind!r})")
+    c = {
+        "k": jnp.zeros((n_blocks, block_size, cfg.n_kv_heads, cfg.head_dim),
+                       dtype),
+        "v": jnp.zeros((n_blocks, block_size, cfg.n_kv_heads, cfg.head_dim),
+                       dtype),
+    }
+    ax = {"k": (None, None, "kv_cache_heads", None),
+          "v": (None, None, "kv_cache_heads", None)}
+    return c, ax
+
 
 def init_attn_cache(cfg: ArchConfig, plan: ShardPlan, batch: int, seq_len: int,
                     dtype=jnp.bfloat16):

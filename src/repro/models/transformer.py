@@ -205,6 +205,31 @@ def block_decode(x, lp: Params, lc: Params, positions, cfg: ArchConfig,
     return x, new_cache
 
 
+def block_decode_paged(x, lp: Params, lc: Params, positions, block_tables,
+                       cfg: ArchConfig, plan: ShardPlan):
+    """Paged-pool variant of ``block_decode`` (plain-GQA families only).
+
+    lc holds this layer's slice of the global block pool; the attention
+    write/gather goes through the per-sequence block table.
+    """
+    h = _norm(x, lp["norm1"], cfg)
+    attn_out, attn_cache = A.gqa_decode_paged(lp["attn"], h, lc["attn"],
+                                              positions, block_tables,
+                                              cfg, plan)
+    x = x + attn_out
+    h = _norm(x, lp["norm2"], cfg)
+    if cfg.n_experts:
+        y, _ = M.moe_ffn(lp["moe"], h[:, None], cfg, plan)
+        y = y[:, 0]
+    elif cfg.mlp_kind == "gelu2":
+        y = L.gelu_mlp(h, {k: v.astype(plan.compute_dtype) for k, v in lp["mlp"].items()})
+    else:
+        y = L.glu_mlp(h, {k: v.astype(plan.compute_dtype) for k, v in lp["mlp"].items()},
+                      activation=cfg.activation)
+    x = x + y
+    return x, {"attn": attn_cache}
+
+
 # ---------------------------------------------------------------------------
 # vocab-sharded embedding / loss
 # ---------------------------------------------------------------------------
@@ -402,6 +427,15 @@ class Model:
         return jnp.where(cols < cfg.vocab_size, logits, NEG_INF)
 
     # ----- serving -----
+    @property
+    def supports_paged(self) -> bool:
+        """Paged KV serving needs plain GQA attention (MLA latent, SWA ring
+        and mamba/rwkv recurrent state keep the slot-based pool)."""
+        cfg = self.cfg
+        return (not cfg.rwkv and cfg.family != "hybrid"
+                and cfg.attn_kind == "gqa" and cfg.causal
+                and cfg.input_kind == "tokens")
+
     def prefill(self, params, inputs):
         """Returns (last-token logits (B, V_pad), cache stacked over layers)."""
         cfg, plan = self.cfg, self.plan
@@ -411,6 +445,24 @@ class Model:
         x, caches, _ = self._trunk(params, x, positions, want_cache=True)
         logits = self._head(params, x[:, -1])
         return logits, caches
+
+    def prefill_ragged(self, params, inputs, lengths):
+        """Batched prefill over right-padded prompts of one bucket shape.
+
+        inputs: (B, S_bucket) token ids, row b valid for its first
+        lengths[b] tokens; returns logits at each row's true last token
+        (B, V_pad) + the stacked cache.  Padded tail positions attend only
+        causally so rows' valid prefixes are exact; their cache entries are
+        garbage past lengths[b] and masked downstream by position.
+        """
+        cfg, plan = self.cfg, self.plan
+        x = self._embed_inputs(params, inputs)
+        Sq = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(Sq)[None, :], x.shape[:2])
+        x, caches, _ = self._trunk(params, x, positions, want_cache=True)
+        last = jnp.take_along_axis(
+            x, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        return self._head(params, last), caches
 
     def decode_step(self, params, cache, tokens, positions):
         """One token per sequence. tokens: (B,), positions: (B,)."""
@@ -424,6 +476,26 @@ class Model:
         def body(x, inp):
             lp, lc = inp
             x, new_lc = block_decode(x, lp, lc, positions, cfg, plan)
+            return x, new_lc
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        x = _norm(x, params["final_norm"], cfg)
+        logits = self._head(params, x)
+        return logits, new_cache
+
+    def decode_step_paged(self, params, cache, tokens, positions,
+                          block_tables):
+        """One token per lane over the paged pool.  tokens/positions: (B,);
+        block_tables: (B, T) physical block ids per lane."""
+        cfg, plan = self.cfg, self.plan
+        x = embed_lookup(params["embed"], tokens, cfg, plan)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), plan.compute_dtype)
+
+        def body(x, inp):
+            lp, lc = inp
+            x, new_lc = block_decode_paged(x, lp, lc, positions, block_tables,
+                                           cfg, plan)
             return x, new_lc
 
         x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
@@ -473,6 +545,15 @@ class Model:
         single, _ = self._cache_template(batch, seq_len, dtype)
         return jax.tree.map(
             lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), single)
+
+    def init_paged_cache(self, n_blocks: int, block_size: int,
+                         dtype=jnp.bfloat16):
+        """Layer-stacked paged KV pool: leaves (L, n_blocks, bs, K, hd)."""
+        cfg, plan = self.cfg, self.plan
+        c, _ = A.init_paged_attn_cache(cfg, plan, n_blocks, block_size, dtype)
+        return jax.tree.map(
+            lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype),
+            {"attn": c})
 
     def cache_axes(self):
         _, ax = self._cache_template(1, 8, jnp.bfloat16)

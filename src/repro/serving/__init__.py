@@ -1,5 +1,6 @@
 from repro.serving.engine import Engine, EngineKnobs, EngineStats
-from repro.serving.kvcache import CachePool
+from repro.serving.kvcache import CachePool, PagedCachePool
 from repro.serving.request import Request
 
-__all__ = ["Engine", "EngineKnobs", "EngineStats", "CachePool", "Request"]
+__all__ = ["Engine", "EngineKnobs", "EngineStats", "CachePool",
+           "PagedCachePool", "Request"]

@@ -1,10 +1,22 @@
-"""LLM serving engine: continuous batching over a slot-based KV cache.
+"""LLM serving engine: continuous batching over a paged (or slot) KV cache.
 
 One Engine == one SaaS "VM instance" in TAPAS terms.  It exposes the knobs
 the Instance Configurator turns (paper Table 1): max batch size, frequency
 cap (simulated via a step-time multiplier), model variant (size /
 quantization — swap params), and reports goodput (tokens/s within TTFT/TBT
 SLOs, SLO = 5x unloaded latency, paper §3.3).
+
+Serving modes:
+
+* ``paged`` (default for plain-GQA models) — KV lives in a global block
+  pool (``PagedCachePool``); admission runs *bucketed batched prefill*
+  (prompts padded to power-of-two length buckets, one jitted prefill per
+  bucket shape instead of one trace per request) and decode walks
+  per-request block tables.  When the pool runs out of blocks mid-decode
+  the youngest request is preempted and recomputed later (vLLM-style).
+* ``slots`` — the legacy contiguous-slot pool, kept for cache families the
+  block pool cannot hold (MLA latent, SWA ring, recurrent state) and as
+  the ground truth the paged path is tested against.
 """
 from __future__ import annotations
 
@@ -14,9 +26,10 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.transformer import Model
-from repro.serving.kvcache import CachePool
+from repro.serving.kvcache import CachePool, PagedCachePool
 from repro.serving.request import Request
 
 
@@ -33,23 +46,55 @@ class EngineKnobs:
 class EngineStats:
     prefill_tokens: int = 0
     decode_tokens: int = 0
+    prefill_batches: int = 0     # jitted prefill launches (not requests)
+    preemptions: int = 0         # paged pool ran dry -> recompute later
     completed: list = field(default_factory=list)
     step_times: list = field(default_factory=list)
 
 
+def _bucket(n: int, lo: int = 16) -> int:
+    """Power-of-two prompt-length bucket (bounds distinct prefill shapes)."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
 class Engine:
     def __init__(self, model: Model, params: Any, *, max_seq: int = 512,
-                 n_slots: int = 8, knobs: EngineKnobs | None = None):
+                 n_slots: int = 8, knobs: EngineKnobs | None = None,
+                 paged: bool | None = None, block_size: int = 16,
+                 n_blocks: int | None = None):
         self.model = model
         self.variants: dict[str, tuple[Model, Any]] = {"full": (model, params)}
         self.knobs = knobs or EngineKnobs(max_batch=n_slots)
-        self.pool = CachePool(model, n_slots, max_seq)
         self.max_seq = max_seq
+        self.n_slots = n_slots
+        self.block_size = block_size
+        self.n_blocks = n_blocks
+        self.paged = model.supports_paged if paged is None else paged
         self.queue: list[Request] = []
         self.active: dict[int, Request] = {}
         self.stats = EngineStats()
-        self._prefill_jit = jax.jit(model.prefill)
-        self._decode_jit = jax.jit(model.decode_step)
+        self._bind(model)
+
+    def _bind(self, model: Model) -> None:
+        """(Re)build pool + jitted entry points for the current model."""
+        self.model = model
+        if self.paged and not model.supports_paged:
+            raise ValueError(f"{model.cfg.name} cannot serve paged "
+                             f"(attn_kind={model.cfg.attn_kind!r})")
+        if self.paged:
+            self.pool: Any = PagedCachePool(
+                model, self.n_slots, self.max_seq,
+                block_size=self.block_size, n_blocks=self.n_blocks)
+            self._prefill_jit = jax.jit(model.prefill_ragged)
+            self._decode_jit = jax.jit(model.decode_step_paged,
+                                       donate_argnums=(1,))
+        else:
+            self.pool = CachePool(model, self.n_slots, self.max_seq)
+            self._prefill_jit = jax.jit(model.prefill)
+            self._decode_jit = jax.jit(model.decode_step)
 
     # -- variant management (model-size / quantization knob) --------------
     def add_variant(self, name: str, model: Model, params: Any) -> None:
@@ -58,12 +103,9 @@ class Engine:
     def set_variant(self, name: str) -> None:
         """Reloading a different model variant (costs a pause, paper §4.3)."""
         model, params = self.variants[name]
-        self.model = model
         self.knobs.variant = name
-        self.pool = CachePool(model, self.pool.n_slots, self.max_seq)
         self.active.clear()
-        self._prefill_jit = jax.jit(model.prefill)
-        self._decode_jit = jax.jit(model.decode_step)
+        self._bind(model)
 
     @property
     def params(self):
@@ -73,19 +115,94 @@ class Engine:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    @staticmethod
+    def _context(req: Request) -> list:
+        """Prefill context: prompt plus any tokens generated before a
+        preemption (recompute-style resume)."""
+        return list(req.prompt) + list(req.output)
+
+    def _activate(self, req: Request, tok: int, now: float) -> None:
+        """Append the prefill token and either activate the request or, if
+        it already hit its budget/eos (e.g. resumed right at the limit),
+        finish it without occupying a decode lane."""
+        req.output.append(tok)
+        if req.first_token_s is None:
+            req.first_token_s = now
+        if (len(req.output) >= req.max_new_tokens
+                or (req.eos_id is not None and tok == req.eos_id)):
+            req.finish_s = now
+            self.stats.completed.append(req)
+            self.pool.release(req.req_id)
+            return
+        self.active[req.req_id] = req
+
     def _admit(self, now: float) -> None:
+        if self.paged:
+            self._admit_paged(now)
+            return
         while (self.queue and self.pool.has_free()
                and len(self.active) < self.knobs.max_batch
                and not self.knobs.paused):
             req = self.queue.pop(0)
-            prompt = jnp.asarray([req.prompt], jnp.int32)
+            prompt = jnp.asarray([self._context(req)], jnp.int32)
             logits, cache = self._prefill_jit(self.params, prompt)
-            self.stats.prefill_tokens += len(req.prompt)
+            self.stats.prefill_tokens += prompt.shape[1]
+            self.stats.prefill_batches += 1
             tok = int(jnp.argmax(logits[0, : self.model.cfg.vocab_size]))
-            self.pool.insert(req.req_id, cache, len(req.prompt))
-            req.output.append(tok)
-            req.first_token_s = now
-            self.active[req.req_id] = req
+            self.pool.insert(req.req_id, cache, prompt.shape[1])
+            self._activate(req, tok, now)
+
+    def _admit_paged(self, now: float) -> None:
+        """Batched admission: drain the queue into length buckets, one
+        jitted prefill per bucket shape (not per request)."""
+        batch: list[Request] = []
+        # reserve lanes/blocks as the batch builds — can_admit alone would
+        # double-count the free lists across requests admitted together
+        lanes_left = len(self.pool.free_lanes)
+        blocks_left = len(self.pool.free_blocks)
+        while (self.queue and not self.knobs.paused
+               and len(self.active) + len(batch) < self.knobs.max_batch
+               and lanes_left > 0):
+            ctx_len = len(self._context(self.queue[0]))
+            # reserve the first decode append too (an extra block exactly
+            # when the context ends on a block boundary)
+            need = self.pool.blocks_for(ctx_len + 1)
+            if blocks_left < need:
+                break
+            batch.append(self.queue.pop(0))
+            lanes_left -= 1
+            blocks_left -= need
+        if not batch:
+            return
+        groups: dict[int, list[Request]] = {}
+        for req in batch:
+            groups.setdefault(_bucket(len(self._context(req))), []).append(req)
+        for s_bucket, reqs in sorted(groups.items()):
+            rows = len(reqs)
+            b_pad = _bucket(rows, lo=1)   # batch bucket bounds retraces too
+            tokens = np.zeros((b_pad, s_bucket), np.int32)
+            lengths = np.ones(b_pad, np.int32)
+            for i, req in enumerate(reqs):
+                ctx = self._context(req)
+                tokens[i, : len(ctx)] = ctx
+                lengths[i] = len(ctx)
+            logits, cache = self._prefill_jit(
+                self.params, jnp.asarray(tokens), jnp.asarray(lengths))
+            nxt = jnp.argmax(logits[:, : self.model.cfg.vocab_size], axis=-1)
+            self.stats.prefill_batches += 1
+            for i, req in enumerate(reqs):
+                self.pool.insert(req.req_id, cache, i, int(lengths[i]))
+                self.stats.prefill_tokens += int(lengths[i])
+                self._activate(req, int(nxt[i]), now)
+
+    def _preempt(self, req_ids: list) -> None:
+        """Pool ran dry: drop these requests' blocks and requeue them at the
+        front for recompute (prompt + generated-so-far become the context)."""
+        for rid in req_ids:
+            req = self.active.pop(rid)
+            self.pool.release(rid)
+            self.queue.insert(0, req)
+            self.stats.preemptions += 1
 
     def step(self, now: float | None = None) -> int:
         """One scheduler iteration: admit + one decode step for all actives.
@@ -97,28 +214,45 @@ class Engine:
         self._admit(now)
         if not self.active:
             return 0
-        slots = {rid: self.pool.slot_of[rid] for rid in self.active}
-        tokens = [0] * self.pool.n_slots
+        if self.paged:
+            # allocate append blocks oldest-request-first; when the pool is
+            # exhausted the youngest actives are the ones preempted
+            victims = self.pool.ensure_append_blocks(sorted(self.active))
+            if victims:
+                self._preempt(victims)
+            if not self.active:
+                return 0
+            lanes = {rid: self.pool.lane_of[rid] for rid in self.active}
+            width = self.pool.n_lanes
+        else:
+            lanes = {rid: self.pool.slot_of[rid] for rid in self.active}
+            width = self.pool.n_slots
+        tokens = [0] * width
         for rid, req in self.active.items():
-            tokens[slots[rid]] = req.output[-1]
+            tokens[lanes[rid]] = req.output[-1]
         positions = self.pool.positions()
-        logits, self.pool.cache = self._decode_jit(
-            self.params, self.pool.cache,
-            jnp.asarray(tokens, jnp.int32), positions)
+        if self.paged:
+            logits, self.pool.cache = self._decode_jit(
+                self.params, self.pool.cache,
+                jnp.asarray(tokens, jnp.int32), positions, self.pool.tables())
+        else:
+            logits, self.pool.cache = self._decode_jit(
+                self.params, self.pool.cache,
+                jnp.asarray(tokens, jnp.int32), positions)
         nxt = jnp.argmax(logits[:, : self.model.cfg.vocab_size], axis=-1)
         produced = 0
         finished = []
         for rid, req in list(self.active.items()):
-            s = slots[rid]
-            tok = int(nxt[s])
+            ln = lanes[rid]
+            tok = int(nxt[ln])
             req.output.append(tok)
             produced += 1
-            full = self.pool.lengths[s] + 1 >= self.max_seq
+            full = int(self.pool.lengths[ln]) + 1 >= self.max_seq
             if (len(req.output) >= req.max_new_tokens
                     or (req.eos_id is not None and tok == req.eos_id) or full):
                 req.finish_s = now
                 finished.append(rid)
-        self.pool.advance(list(slots.values()))
+        self.pool.advance(list(lanes.values()))
         for rid in finished:
             self.stats.completed.append(self.active.pop(rid))
             self.pool.release(rid)

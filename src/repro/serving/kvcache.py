@@ -1,17 +1,31 @@
-"""Slot-based KV-cache pool for continuous batching.
+"""KV-cache pools for continuous batching.
 
-One pre-allocated decode cache (leaves stacked (L, SLOTS, ...)); prefill
-results for a single request are inserted into a free slot; freed slots are
-recycled.  Works for every cache family (GQA k/v, MLA latent, SWA ring,
-mamba/rwkv state) because insertion is a structural tree surgery on the
-batch dim (+ sequence prefix where one exists).
+Two pools:
+
+``PagedCachePool`` — the production path.  One global block pool per layer
+(leaves ``(L, n_blocks, block_size, K, hd)``), a free-list block allocator,
+and a per-request block table mapping logical KV blocks to physical pool
+blocks (vLLM-style PagedAttention).  Admission writes exactly the blocks a
+prompt occupies (one donated-jit scatter — O(blocks touched), never a
+whole-tree copy), decode appends allocate blocks on demand, and release
+returns blocks to the free list in O(blocks held).  Physical block 0 is a
+reserved *parking block*: idle decode lanes point their whole table at it
+so a fixed-shape decode batch never reads unowned memory.
+
+``CachePool`` — the legacy slot-based pool.  One contiguous ``max_seq``
+cache per slot; insertion is a structural tree surgery on the batch dim.
+It remains the fallback for cache families the paged pool cannot hold
+(MLA latent, SWA ring, mamba/rwkv state) and the ground truth the paged
+engine is tested against.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.transformer import Model
 
@@ -54,9 +68,133 @@ class CachePool:
     def positions(self) -> jnp.ndarray:
         """Next write position per slot (parked slots write at 0, which is
         always overwritten by the next prefill insert)."""
-        return jnp.asarray([self.lengths[s] if self.lengths[s] else 0
-                            for s in range(self.n_slots)], jnp.int32)
+        return jnp.asarray(self.lengths, jnp.int32)
 
     def advance(self, active_slots: list) -> None:
         for s in active_slots:
             self.lengths[s] += 1
+
+
+# ---------------------------------------------------------------------------
+# paged pool
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, donate_argnums=(0,))
+def _paged_insert(pool, prefill, blk_ids, row):
+    """Scatter one request's prefill KV into its allocated pool blocks.
+
+    pool leaves: (L, n_blocks, bs, K, hd); prefill leaves (L, B, S_pad, ...);
+    blk_ids: (n,) physical ids; row: which batch row of the prefill.
+    Only the ``n`` indexed blocks are written — with the pool donated, XLA
+    aliases in/out and updates them in place (no copy of untouched blocks).
+    """
+    def put(dst, src):
+        n, bs = blk_ids.shape[0], dst.shape[2]
+        seq = jax.lax.dynamic_index_in_dim(src, row, axis=1, keepdims=False)
+        need = n * bs
+        if seq.shape[1] < need:
+            pad = [(0, 0)] * seq.ndim
+            pad[1] = (0, need - seq.shape[1])
+            seq = jnp.pad(seq, pad)
+        seq = seq[:, :need].reshape((dst.shape[0], n, bs) + dst.shape[3:])
+        # (L, n, bs, ...) -> scatter along the block axis
+        return dst.at[:, blk_ids].set(seq.astype(dst.dtype))
+
+    return jax.tree.map(put, pool, prefill)
+
+
+class PagedCachePool:
+    """Global block-pool KV cache with per-request block tables."""
+
+    def __init__(self, model: Model, n_lanes: int, max_seq: int, *,
+                 block_size: int = 16, n_blocks: int | None = None,
+                 dtype=jnp.bfloat16):
+        self.model = model
+        self.n_lanes = n_lanes              # fixed decode-batch width
+        self.max_seq = max_seq
+        self.block_size = block_size
+        self.blocks_per_seq = -(-max_seq // block_size)
+        # +1: block 0 is the reserved parking block, never allocated
+        self.n_blocks = n_blocks if n_blocks is not None \
+            else 1 + n_lanes * self.blocks_per_seq
+        self.cache = model.init_paged_cache(self.n_blocks, block_size, dtype)
+        self.free_blocks = list(range(self.n_blocks - 1, 0, -1))
+        self.free_lanes = list(range(n_lanes - 1, -1, -1))
+        self.lane_of: dict[int, int] = {}    # req_id -> lane
+        self.blocks_of: dict[int, list] = {}  # req_id -> physical block ids
+        self.block_tables = np.zeros((n_lanes, self.blocks_per_seq), np.int32)
+        self.lengths = np.zeros(n_lanes, np.int32)  # tokens written per lane
+
+    # -- allocator ---------------------------------------------------------
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def can_admit(self, prompt_len: int) -> bool:
+        """Lane + blocks for the prompt and its first decode append."""
+        return (bool(self.free_lanes)
+                and len(self.free_blocks) >= self.blocks_for(prompt_len + 1))
+
+    @property
+    def used_blocks(self) -> int:
+        return self.n_blocks - 1 - len(self.free_blocks)
+
+    def utilization(self) -> float:
+        return self.used_blocks / max(self.n_blocks - 1, 1)
+
+    # -- request lifecycle -------------------------------------------------
+    def insert(self, req_id: int, prefill_cache: Any, row: int,
+               prompt_len: int) -> int:
+        """Admit one request: allocate its prompt blocks and scatter row
+        ``row`` of a (possibly batched) prefill cache into them."""
+        lane = self.free_lanes.pop()
+        n = self.blocks_for(prompt_len)
+        assert len(self.free_blocks) >= n, "admission not gated by can_admit"
+        blks = [self.free_blocks.pop() for _ in range(n)]
+        self.cache = _paged_insert(self.cache, prefill_cache,
+                                   jnp.asarray(blks, jnp.int32),
+                                   jnp.asarray(row, jnp.int32))
+        self.block_tables[lane, :] = 0
+        self.block_tables[lane, :n] = blks
+        self.lengths[lane] = prompt_len
+        self.lane_of[req_id] = lane
+        self.blocks_of[req_id] = blks
+        return lane
+
+    def ensure_append_blocks(self, req_ids: list) -> list:
+        """Make sure each request can write its next token (position
+        ``lengths[lane]``); allocate a fresh block at block-boundary
+        crossings.  Returns the req_ids that could NOT get a block — the
+        engine preempts those (release + recompute later)."""
+        victims = []
+        for rid in req_ids:
+            lane = self.lane_of[rid]
+            bi = int(self.lengths[lane]) // self.block_size
+            if bi < len(self.blocks_of[rid]):
+                continue
+            if bi >= self.blocks_per_seq or not self.free_blocks:
+                victims.append(rid)
+                continue
+            blk = self.free_blocks.pop()
+            self.blocks_of[rid].append(blk)
+            self.block_tables[lane, bi] = blk
+        return victims
+
+    def release(self, req_id: int) -> None:
+        lane = self.lane_of.pop(req_id)
+        self.free_blocks.extend(reversed(self.blocks_of.pop(req_id)))
+        self.free_lanes.append(lane)
+        self.block_tables[lane, :] = 0       # park the lane on block 0
+        self.lengths[lane] = 0
+
+    # -- decode-step views -------------------------------------------------
+    def positions(self) -> jnp.ndarray:
+        """Next write position per lane (parked lanes write into the
+        parking block at offset 0; their output is discarded)."""
+        return jnp.asarray(self.lengths, jnp.int32)
+
+    def tables(self) -> jnp.ndarray:
+        return jnp.asarray(self.block_tables, jnp.int32)
+
+    def advance(self, active_lanes: list) -> None:
+        for ln in active_lanes:
+            self.lengths[ln] += 1

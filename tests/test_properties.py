@@ -1,6 +1,10 @@
 """Hypothesis property-based tests on system invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.analysis.hlo_cost import HloModuleCost, _shape_info
 from repro.core.power import PowerModel
