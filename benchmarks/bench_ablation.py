@@ -2,8 +2,6 @@
 (Place / Route / Config and combinations) x SaaS fraction {0, 0.5, 1}."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import emit, save, timed
 from repro.core.datacenter import DCConfig
 from repro.core.simulator import (BASELINE, TAPAS, ClusterSim, Policy,

@@ -2,8 +2,6 @@
 power over one week (paper: TAPAS -15% temp, -24% power vs Baseline)."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import emit, save, timed
 from repro.core.datacenter import DCConfig
 from repro.core.simulator import BASELINE, TAPAS, ClusterSim, SimConfig

@@ -7,7 +7,7 @@ registry maps the public ``--arch <id>`` names (dashes) to configs.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

@@ -2,25 +2,39 @@
 
 The paper's primary contribution — placement (allocator), routing (router),
 instance configuration (configurator) over the §2 thermal/power models —
-plus the discrete-time cluster simulator, failure drills and
-oversubscription planner used by §5.
+behind the typed ``ClusterState``/``ControlPolicy`` control-plane API,
+plus the step-wise discrete-time cluster simulator, scenario scripting,
+failure drills and oversubscription planner used by §5.
 """
 from repro.core.allocator import (AllocatorState, BaselineAllocator,
-                                  TapasAllocator)
-from repro.core.configurator import InstanceConfigurator
+                                  PlacementPolicy, TapasAllocator)
+from repro.core.configurator import InstanceConfigurator, ReconfigurePolicy
 from repro.core.datacenter import (Datacenter, DCConfig, HWProfile,
                                    scale_datacenter)
 from repro.core.power import PowerModel, row_power
-from repro.core.router import BaselineRouter, TapasRouter
-from repro.core.simulator import (BASELINE, TAPAS, ClusterSim, FailureEvent,
-                                  Policy, SimConfig, SimResult, run_policy)
+from repro.core.risk import (DEFAULT_RISK_KNOBS, DEFAULT_THRESHOLDS,
+                             ReconfigureThresholds, RiskKnobs, server_risk)
+from repro.core.router import (BaselineRouter, RoutingPolicy, TapasRouter)
+from repro.core.scenario import (DemandSurge, FailureEvent, Scenario,
+                                 VMArrival, WeatherShift)
+from repro.core.simulator import (BASELINE, TAPAS, ClusterSim,
+                                  CompositeControlPlane, Policy, SimConfig,
+                                  SimResult, build_control_policy,
+                                  run_policy)
+from repro.core.state import (ClusterState, ConfigChange, ControlPolicy,
+                              EndpointRoute, InstanceView)
 from repro.core.thermal import ThermalModel, outside_temperature
 
 __all__ = [
     "AllocatorState", "BaselineAllocator", "TapasAllocator",
-    "InstanceConfigurator", "Datacenter", "DCConfig", "HWProfile",
-    "scale_datacenter", "PowerModel", "row_power", "BaselineRouter",
-    "TapasRouter", "BASELINE", "TAPAS", "ClusterSim", "FailureEvent",
-    "Policy", "SimConfig", "SimResult", "run_policy", "ThermalModel",
-    "outside_temperature",
+    "PlacementPolicy", "InstanceConfigurator", "ReconfigurePolicy",
+    "Datacenter", "DCConfig", "HWProfile", "scale_datacenter",
+    "PowerModel", "row_power", "BaselineRouter", "TapasRouter",
+    "RoutingPolicy", "DEFAULT_RISK_KNOBS", "DEFAULT_THRESHOLDS",
+    "ReconfigureThresholds", "RiskKnobs", "server_risk",
+    "DemandSurge", "FailureEvent", "Scenario", "VMArrival", "WeatherShift",
+    "BASELINE", "TAPAS", "ClusterSim", "CompositeControlPlane", "Policy",
+    "SimConfig", "SimResult", "build_control_policy", "run_policy",
+    "ClusterState", "ConfigChange", "ControlPolicy", "EndpointRoute",
+    "InstanceView", "ThermalModel", "outside_temperature",
 ]

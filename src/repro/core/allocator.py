@@ -159,3 +159,19 @@ class BaselineAllocator:
         server = int(self.rng.choice(empty[:4]))
         st.place(server, vm, predict_peak_util(vm, seed=seed))
         return server
+
+
+class PlacementPolicy:
+    """``ControlPolicy.place`` adapter over a Baseline/Tapas allocator.
+
+    Reads occupancy from ``state.alloc`` (which the wrapped allocator
+    mutates on a successful placement) and the workload seed from
+    ``state.seed``; everything else about the decision lives in the
+    wrapped rule engine.
+    """
+
+    def __init__(self, allocator):
+        self.allocator = allocator
+
+    def place(self, state, vm: VMSpec) -> int | None:
+        return self.allocator.place(state.alloc, vm, seed=state.seed)

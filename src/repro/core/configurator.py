@@ -10,9 +10,14 @@ takes up to −12% quality instead of capping performance).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
+
+import numpy as np
 
 from repro.core import profiles as P
+from repro.core.risk import DEFAULT_THRESHOLDS, ReconfigureThresholds
+# no cycle: state.py imports allocator/profiles, never this module
+from repro.core.state import ConfigChange, InstanceView
 
 
 @dataclass
@@ -69,3 +74,71 @@ class InstanceConfigurator:
 
     def reset(self, vm_id: int) -> None:
         self.state.pop(vm_id, None)
+
+
+class ReconfigurePolicy:
+    """``ControlPolicy`` reconfigure/lifecycle adapter over the
+    ``InstanceConfigurator``.
+
+    ``begin_tick`` advances reload countdowns and publishes every SaaS
+    server's current config into ``state.instances``; ``reconfigure`` runs
+    the §4.3 loop — servers whose risk exceeds ``thresholds.hot_risk`` get
+    power/temperature caps proportional to their remaining margin, servers
+    back under ``thresholds.cool_risk`` are restored to nominal — and
+    returns the ``ConfigChange`` list so engine backends can mirror the
+    decisions onto real serving engines.  ``active=False`` (Baseline)
+    publishes telemetry but never reconfigures.
+    """
+
+    def __init__(self, configurator: InstanceConfigurator, *,
+                 active: bool,
+                 thresholds: ReconfigureThresholds | None = None):
+        self.configurator = configurator
+        self.active = active
+        self.thresholds = thresholds or DEFAULT_THRESHOLDS
+
+    def begin_tick(self, state) -> None:
+        self.configurator.tick()
+        for srv in np.flatnonzero(state.kind == 2):
+            st = self.configurator.get(int(srv))
+            state.instances[int(srv)] = InstanceView(
+                entry=st.entry, paused=st.pause_ticks > 0)
+
+    def release(self, state, server: int) -> None:
+        self.configurator.reset(server)
+
+    def _publish(self, state, srv: int, st: VMConfigState,
+                 before: P.ConfigPoint, changes: list) -> None:
+        reloading = st.pause_ticks > 0
+        state.instances[srv] = InstanceView(entry=st.entry, paused=reloading)
+        if st.current != before:
+            changes.append(ConfigChange(server=srv, entry=st.entry,
+                                        reloading=reloading))
+
+    def reconfigure(self, state) -> list:
+        if not self.active:
+            return []
+        th = self.thresholds
+        changes: list = []
+        hot = state.risk > th.hot_risk
+        for srv in np.flatnonzero((state.kind == 2) & hot):
+            margin = 1.0 - state.risk[srv]
+            before = self.configurator.get(int(srv)).current
+            st = self.configurator.decide(
+                int(srv),
+                power_cap=max(th.cap_floor, margin + th.hot_risk),
+                temp_cap=max(th.cap_floor, margin + th.hot_risk),
+                emergency=state.emergency,
+                min_goodput=float(state.saas_load[srv])
+                * state.nominal.goodput)
+            self._publish(state, int(srv), st, before, changes)
+        # restore drained servers once their risk clears
+        cool = state.risk < th.cool_risk
+        for srv in np.flatnonzero((state.kind == 2) & cool):
+            st0 = self.configurator.state.get(int(srv))
+            if st0 is not None and st0.current != P.NOMINAL:
+                before = st0.current
+                st = self.configurator.decide(
+                    int(srv), power_cap=1.0, temp_cap=th.restore_temp_cap)
+                self._publish(state, int(srv), st, before, changes)
+        return changes

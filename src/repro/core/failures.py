@@ -6,15 +6,18 @@ power.  The drill compares Baseline (uniform frequency capping) against
 TAPAS (recompute limits -> steer -> reconfigure -> cap IaaS last) over a
 peak-load window, reporting perf impact (% frequency capped x fraction of
 workloads affected) and quality impact per workload class.
+
+Drills are scripted as ``Scenario`` events — kind typos and inverted
+windows fail at construction, and callers can stack extra events (demand
+surges, weather shifts) onto the drill through the same API.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
-import numpy as np
-
-from repro.core.simulator import (BASELINE, TAPAS, ClusterSim, FailureEvent,
-                                  Policy, SimConfig)
+from repro.core.scenario import FailureEvent, Scenario
+from repro.core.simulator import (BASELINE, TAPAS, ClusterSim, Policy,
+                                  SimConfig)
 
 
 @dataclass
@@ -35,20 +38,25 @@ class DrillReport:
 
 
 def run_drill(kind: str, policy: Policy, *, dc=None, seed: int = 0,
-              horizon_h: float = 18.0) -> DrillReport:
+              horizon_h: float = 18.0,
+              extra: Scenario | None = None) -> DrillReport:
     """Failure strikes at the peak-load hour and lasts 1.5h (the paper
-    evaluates a 5-minute peak window; a longer window smooths tick noise)."""
+    evaluates a 5-minute peak window; a longer window smooths tick noise).
+
+    ``extra``: additional scenario events stacked onto both the clean and
+    failure runs (e.g. a DemandSurge to drill under surge load)."""
     from repro.core.datacenter import DCConfig
     dc = dc or DCConfig(n_rows=8, racks_per_row=10, servers_per_rack=4)
     # strike at the diurnal demand peak (~14:00-16:00) with the fleet hot
     start = min(14.0, horizon_h - 2.5)
-    ev = FailureEvent(kind=kind, start_h=start, end_h=start + 1.5, target=0)
+    drill = Scenario((FailureEvent(kind=kind, start_h=start,
+                                   end_h=start + 1.5, target=0),))
+    clean_scenario = extra if extra is not None else Scenario()
     kw = dict(dc=dc, horizon_h=horizon_h, seed=seed, policy=policy,
               occupancy=0.95, demand_scale=0.98)
-    base_cfg = SimConfig(**kw)
-    fail_cfg = SimConfig(**kw, failures=(ev,))
-    clean = ClusterSim(base_cfg).run()
-    failed = ClusterSim(fail_cfg).run()
+    clean = ClusterSim(SimConfig(scenario=clean_scenario, **kw)).run()
+    failed = ClusterSim(SimConfig(scenario=clean_scenario + drill,
+                                  **kw)).run()
 
     iaas_perf = -(failed.iaas_perf_impact - clean.iaas_perf_impact)
     served_clean = 1.0 - clean.unserved_frac

@@ -4,15 +4,18 @@ Add racks into existing rows without growing the provisioned cooling/power
 envelopes; measure the fraction of time under thermal/power capping per
 policy.  The paper's claim: Baseline degrades past ~20% oversubscription
 while TAPAS holds capping below 0.7% of time at up to 40% more servers.
+
+Sweeps take an optional ``Scenario`` so planners can size oversubscription
+under scripted stress (failure drills, demand surges, heat waves) through
+the same event API the failure drills use.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
-import numpy as np
-
 from repro.core.datacenter import DCConfig, scale_datacenter
-from repro.core.simulator import ClusterSim, Policy, SimConfig
+from repro.core.scenario import Scenario
+from repro.core.simulator import ClusterSim, SimConfig
 
 
 @dataclass
@@ -34,14 +37,15 @@ class OversubPoint:
 
 def sweep(policies: list, ratios=(0.0, 0.1, 0.2, 0.3, 0.4, 0.5), *,
           dc: DCConfig | None = None, horizon_h: float = 24.0,
-          seed: int = 0) -> list:
+          seed: int = 0, scenario: Scenario | None = None) -> list:
     dc = dc or DCConfig(n_rows=8, racks_per_row=10, servers_per_rack=4)
     out = []
     for ratio in ratios:
         scaled = scale_datacenter(dc, ratio)
         for pol in policies:
             res = ClusterSim(SimConfig(dc=scaled, horizon_h=horizon_h,
-                                       seed=seed, policy=pol)).run()
+                                       seed=seed, policy=pol,
+                                       scenario=scenario)).run()
             out.append(OversubPoint(
                 ratio=ratio, policy=pol.name,
                 thermal_capped_frac=res.thermal_capped_frac,
@@ -52,12 +56,17 @@ def sweep(policies: list, ratios=(0.0, 0.1, 0.2, 0.3, 0.4, 0.5), *,
 
 def max_safe_oversubscription(rows: list, policy: str, *,
                               cap_budget: float = 0.007) -> float:
-    """Largest ratio where (thermal+power) capping stays under the budget."""
+    """Largest *contiguous* safe ratio: walk the sweep points in ratio
+    order and stop at the first one whose (thermal+power) capping exceeds
+    the budget.  A failing middle point caps the answer — recommending a
+    ratio beyond a known-bad operating point would hide a regression the
+    operator must pass through while scaling up."""
+    pts = sorted((r["oversub"],
+                  (r["thermal_capped_pct"] + r["power_capped_pct"]) / 100.0)
+                 for r in rows if r["policy"] == policy)
     best = 0.0
-    for r in rows:
-        if r["policy"] != policy:
-            continue
-        capped = (r["thermal_capped_pct"] + r["power_capped_pct"]) / 100.0
-        if capped <= cap_budget:
-            best = max(best, r["oversub"])
+    for ratio, capped in pts:
+        if capped > cap_budget:
+            break
+        best = max(best, ratio)
     return best

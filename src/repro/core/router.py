@@ -16,9 +16,12 @@ config); per-VM capacity comes from the instance's current config.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
+
+# no cycle: state.py imports allocator/profiles, never this module
+from repro.core.state import EndpointRoute
 
 
 @dataclass
@@ -97,3 +100,50 @@ class TapasRouter:
                 load += share
                 remaining -= share.sum()
         return RouteDecision(load, max(remaining, 0.0))
+
+
+class RoutingPolicy:
+    """``ControlPolicy.route`` adapter over a Baseline/Tapas router.
+
+    Owns the per-endpoint affinity memory (KV-cache reuse shares) and the
+    translation from ``ClusterState`` telemetry to per-server capacities:
+    a paused (reloading) instance serves nothing; otherwise capacity is the
+    instance's goodput fraction times its frequency cap, and a
+    thermal-aware router additionally ceilings each server at the Eq. 2
+    load limit (``state.u_max``) so energy-packing can never push a server
+    past its thermal cap.
+    """
+
+    def __init__(self, router, *, thermal_aware: bool):
+        self.router = router
+        self.thermal_aware = thermal_aware
+        self._affinity: dict = {}
+
+    def route(self, state, endpoint: str, demand: float) -> EndpointRoute:
+        idx = np.asarray(state.endpoints[endpoint])
+        caps, quals = [], []
+        for srv in idx:
+            inst = state.instances[int(srv)]
+            e = inst.entry
+            cap = (0.0 if inst.paused else
+                   (e.goodput / state.nominal.goodput) * state.freq_cap[srv])
+            if self.thermal_aware and cap > 0:
+                busy_max = min(state.u_max[srv] / max(e.temp, 1e-6), 1.0)
+                cap *= busy_max
+            caps.append(cap)
+            quals.append(e.quality)
+        caps = np.asarray(caps)
+        # affinity shares are positional, so they are only valid while the
+        # endpoint's server membership is unchanged — any churn (not just a
+        # size change) resets them, else a departed server's KV-reuse share
+        # would pin load onto an unrelated replacement
+        prev = self._affinity.get(endpoint)
+        if prev is not None and np.array_equal(prev[0], idx):
+            aff = prev[1]
+        else:
+            aff = np.zeros(len(idx))
+        dec = self.router.route(demand, caps, state.risk[idx], aff)
+        self._affinity[endpoint] = (idx, dec.load.copy())
+        return EndpointRoute(servers=idx, load=dec.load,
+                             quality=np.asarray(quals),
+                             unserved=dec.unserved)

@@ -1,0 +1,174 @@
+"""Scenario scripting — composable, validated simulation events.
+
+A ``Scenario`` is an ordered bag of typed events that perturb a simulation
+run: infrastructure failures (paper §5.4), extra VM arrivals, endpoint
+demand surges, and weather/region shifts.  Every event validates its fields
+at construction — a typo'd ``kind="upss"`` raises immediately instead of
+being silently ignored mid-drill — and ``failures.py``, ``oversubscribe.py``
+and the benchmarks all script their runs through this one API instead of
+hand-rolled tuples.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+FAILURE_KINDS = ("ahu", "ups", "cooling", "thermal")
+VM_KINDS = ("iaas", "saas")
+
+
+def _check_window(start_h: float, end_h: float) -> None:
+    if start_h < 0.0:
+        raise ValueError(f"event start_h must be >= 0, got {start_h}")
+    if end_h <= start_h:
+        raise ValueError(
+            f"event window is empty or inverted: [{start_h}, {end_h})")
+
+
+@dataclass(frozen=True)
+class FailureEvent:
+    """Infrastructure failure (paper §5.4, Table 2).
+
+    ``ahu``: one aisle loses 1/N of its AHUs (reduced airflow);
+    ``ups``: 4N/3 failover limits every row to 75% power (fleet-wide —
+    the redundancy pool is shared, so ``target`` does not apply);
+    ``cooling``: DC-level cooling strain (+3 °C inlet, fleet-wide);
+    ``thermal``: the §5.4 thermal emergency (AHU loss + cooling strain).
+    """
+    kind: str          # one of FAILURE_KINDS
+    start_h: float
+    end_h: float
+    target: int = 0    # aisle id (ahu/thermal); must stay 0 for the
+    #                    fleet-wide kinds (ups/cooling)
+
+    def __post_init__(self):
+        if self.kind not in FAILURE_KINDS:
+            raise ValueError(
+                f"unknown failure kind {self.kind!r}; expected one of "
+                f"{FAILURE_KINDS}")
+        _check_window(self.start_h, self.end_h)
+        if self.target < 0:
+            raise ValueError(f"failure target must be >= 0, got {self.target}")
+        if self.kind in ("ups", "cooling") and self.target != 0:
+            raise ValueError(
+                f"{self.kind} failures are fleet-wide; target={self.target} "
+                f"would be silently ignored — leave it at 0")
+
+    def active(self, now_h: float) -> bool:
+        return self.start_h <= now_h < self.end_h
+
+
+@dataclass(frozen=True)
+class DemandSurge:
+    """Multiply one endpoint's (or every endpoint's) demand for a window."""
+    start_h: float
+    end_h: float
+    scale: float              # multiplier on routed demand (> 0)
+    endpoint: str | None = None   # None == every endpoint
+
+    def __post_init__(self):
+        _check_window(self.start_h, self.end_h)
+        if self.scale <= 0.0:
+            raise ValueError(f"surge scale must be > 0, got {self.scale}")
+
+    def active(self, now_h: float) -> bool:
+        return self.start_h <= now_h < self.end_h
+
+
+@dataclass(frozen=True)
+class WeatherShift:
+    """Add ``delta_c`` °C to the outside temperature for a window (heat
+    wave / cold snap / a geo-region swap approximated as an offset)."""
+    start_h: float
+    end_h: float
+    delta_c: float
+
+    def __post_init__(self):
+        _check_window(self.start_h, self.end_h)
+
+    def active(self, now_h: float) -> bool:
+        return self.start_h <= now_h < self.end_h
+
+
+@dataclass(frozen=True)
+class VMArrival:
+    """Script an extra VM arrival on top of the generated workload.
+
+    SaaS arrivals name an endpoint (created if new); IaaS arrivals name a
+    customer template.
+    """
+    arrival_h: float
+    kind: str                 # "iaas" | "saas"
+    customer: str             # endpoint name (saas) / customer template
+    lifetime_h: float
+    peak_util: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in VM_KINDS:
+            raise ValueError(
+                f"unknown VM kind {self.kind!r}; expected one of {VM_KINDS}")
+        if self.arrival_h < 0.0:
+            raise ValueError(f"arrival_h must be >= 0, got {self.arrival_h}")
+        if self.lifetime_h <= 0.0:
+            raise ValueError(
+                f"lifetime_h must be > 0, got {self.lifetime_h}")
+        if not 0.0 < self.peak_util <= 1.0:
+            raise ValueError(
+                f"peak_util must be in (0, 1], got {self.peak_util}")
+
+
+_EVENT_TYPES = (FailureEvent, DemandSurge, WeatherShift, VMArrival)
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A validated, composable set of simulation events.
+
+    Construction rejects anything that is not a known event type; each
+    event validated its own fields already.  Accessors answer the per-tick
+    questions the simulator asks, so policy code never pattern-matches on
+    raw tuples.
+    """
+    events: tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(self.events))
+        for ev in self.events:
+            if not isinstance(ev, _EVENT_TYPES):
+                raise TypeError(
+                    f"unknown scenario event {ev!r}; expected one of "
+                    f"{[t.__name__ for t in _EVENT_TYPES]}")
+
+    # -- per-tick accessors ------------------------------------------------
+    def failures(self, now_h: float) -> list:
+        """Failure events active at ``now_h``."""
+        return [ev for ev in self.events
+                if isinstance(ev, FailureEvent) and ev.active(now_h)]
+
+    def demand_scale(self, now_h: float, endpoint: str) -> float:
+        """Combined demand multiplier for ``endpoint`` at ``now_h``."""
+        scale = 1.0
+        for ev in self.events:
+            if (isinstance(ev, DemandSurge) and ev.active(now_h)
+                    and ev.endpoint in (None, endpoint)):
+                scale *= ev.scale
+        return scale
+
+    def weather_delta(self, now_h: float) -> float:
+        """Outside-temperature offset (°C) at ``now_h``."""
+        return sum(ev.delta_c for ev in self.events
+                   if isinstance(ev, WeatherShift) and ev.active(now_h))
+
+    def vm_arrivals(self) -> list:
+        return [ev for ev in self.events if isinstance(ev, VMArrival)]
+
+    def __add__(self, other: "Scenario") -> "Scenario":
+        return Scenario(self.events + tuple(other.events))
+
+
+def as_scenario(scenario: Scenario | None, failures: tuple = ()) -> Scenario:
+    """Normalize the two SimConfig channels (typed ``scenario`` plus the
+    legacy ``failures`` tuple) into one validated Scenario."""
+    base = scenario if scenario is not None else Scenario()
+    if failures:
+        base = base + Scenario(tuple(failures))
+    return base

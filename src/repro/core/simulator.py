@@ -7,6 +7,29 @@ events and their performance/quality impact.
 
 The physics (thermal/power models) run as vectorized JAX over all servers;
 policy logic is event-level Python/NumPy, mirroring the control plane.
+
+The simulator is *step-wise*: external drivers advance it one tick at a
+time with ``state = sim.step()`` and read (or log) the typed
+``ClusterState`` (see ``core.state``) it returns; ``run()`` is just
+``reset(); while ...: step(); result()``.  Internally each ``step()``
+executes the phases
+
+    state = self.observe()           # arrivals/departures + telemetry
+    self.route(state)                # policy.route per endpoint
+    changes = self.policy.reconfigure(state)
+    self.apply(state)                # physics, throttling, capping
+
+and then advances ``self.tick`` — the phase methods themselves never do,
+so drivers that call phases directly (to perturb state between them) must
+manage ``self.tick`` and run each phase exactly once per tick.  Real
+serving engines bind to simulated SaaS servers via
+``sim.attach_backend`` (see ``serving.backend``).
+
+Policies are ``ControlPolicy`` objects; the Baseline/TAPAS control planes
+are composed from ``PlacementPolicy`` / ``RoutingPolicy`` /
+``ReconfigurePolicy`` adapters over the pre-existing allocator, router and
+instance-configurator classes.  Custom policies plug in through
+``SimConfig(control=...)``.
 """
 from __future__ import annotations
 
@@ -18,13 +41,18 @@ import numpy as np
 
 from repro.core import profiles as P
 from repro.core.allocator import (AllocatorState, BaselineAllocator,
-                                  TapasAllocator)
-from repro.core.configurator import InstanceConfigurator
+                                  PlacementPolicy, TapasAllocator)
+from repro.core.configurator import InstanceConfigurator, ReconfigurePolicy
 from repro.core.datacenter import Datacenter, DCConfig
 from repro.core.power import PowerModel, capping_factors
-from repro.core.router import BaselineRouter, TapasRouter
+from repro.core.risk import server_risk
+from repro.core.router import BaselineRouter, RoutingPolicy, TapasRouter
+from repro.core.scenario import Scenario, WeatherShift, as_scenario
+# legacy re-exports: FailureEvent and friends used to live in this module
+from repro.core.scenario import DemandSurge, FailureEvent, VMArrival  # noqa: F401,E501
+from repro.core.state import ClusterState, ControlPolicy, InstanceView
 from repro.core.thermal import ThermalModel, outside_temperature
-from repro.core.traces import (Workload, endpoint_load, generate_workload,
+from repro.core.traces import (VMSpec, endpoint_load, generate_workload,
                                iaas_util)
 
 
@@ -48,14 +76,6 @@ TAPAS = Policy(place=True, route=True, config=True)
 
 
 @dataclass
-class FailureEvent:
-    kind: str       # "ahu" | "ups" | "cooling"
-    start_h: float
-    end_h: float
-    target: int = 0  # aisle id (ahu) / row-block id (ups)
-
-
-@dataclass
 class SimConfig:
     dc: DCConfig = field(default_factory=DCConfig)
     horizon_h: float = 24.0
@@ -63,9 +83,19 @@ class SimConfig:
     saas_fraction: float = 0.5
     seed: int = 0
     policy: Policy = BASELINE
-    failures: tuple = ()
+    scenario: Scenario | None = None
+    failures: tuple = ()         # legacy channel, merged into the scenario
     occupancy: float = 0.88
     demand_scale: float = 0.85   # endpoint demand vs fleet capacity
+    # custom control plane: a ControlPolicy instance (good for one run) or a
+    # zero-arg factory returning one (rebuilt on every reset(), so repeated
+    # run() calls stay deterministic).  None -> built from ``policy`` flags.
+    control: ControlPolicy | None = None
+    # power-capping semantics (paper §5.4): True caps IaaS only (SaaS was
+    # already reconfigured/steered), False caps every server in the row.
+    # None derives it from ``policy.config`` — set explicitly when driving
+    # a custom ``control`` whose reconfigure behavior the flags don't know.
+    iaas_only_capping: bool | None = None
 
 
 @dataclass
@@ -99,316 +129,462 @@ class SimResult:
         }
 
 
+class CompositeControlPlane:
+    """A ``ControlPolicy`` bundled from placement/routing/reconfigure
+    adapters — the shape both built-in control planes share."""
+
+    def __init__(self, placement: PlacementPolicy, routing: RoutingPolicy,
+                 reconfig: ReconfigurePolicy):
+        self.placement = placement
+        self.routing = routing
+        self.reconfig = reconfig
+
+    def begin_tick(self, state: ClusterState) -> None:
+        self.reconfig.begin_tick(state)
+
+    def place(self, state: ClusterState, vm: VMSpec) -> int | None:
+        return self.placement.place(state, vm)
+
+    def route(self, state: ClusterState, endpoint: str, demand: float):
+        return self.routing.route(state, endpoint, demand)
+
+    def reconfigure(self, state: ClusterState) -> list:
+        return self.reconfig.reconfigure(state)
+
+    def release(self, state: ClusterState, server: int) -> None:
+        self.reconfig.release(state, server)
+
+
+def build_control_policy(policy: Policy, *, tick_s: float,
+                         seed: int = 0) -> CompositeControlPlane:
+    """Compose the Baseline/TAPAS control plane selected by the per-
+    subsystem ``Policy`` flags (paper Fig. 20 ablation axes)."""
+    allocator = (TapasAllocator(seed=seed) if policy.place
+                 else BaselineAllocator(seed=seed))
+    router = TapasRouter() if policy.route else BaselineRouter()
+    configurator = InstanceConfigurator(tick_s=tick_s)
+    return CompositeControlPlane(
+        PlacementPolicy(allocator),
+        RoutingPolicy(router, thermal_aware=policy.route),
+        ReconfigurePolicy(configurator, active=policy.config))
+
+
 class ClusterSim:
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
         self.dc = Datacenter(cfg.dc)
         self.thermal = ThermalModel.calibrate(self.dc)
         self.power = PowerModel.calibrate(self.dc)
+        self.scenario = as_scenario(cfg.scenario, cfg.failures)
+        self._validate_scenario_targets()
         self.work = generate_workload(
             n_servers=self.dc.n_servers, horizon_h=cfg.horizon_h,
             seed=cfg.seed, saas_fraction=cfg.saas_fraction,
             occupancy=cfg.occupancy)
+        self._inject_scripted_vms()
+        self.nominal = P._entry(P.NOMINAL)
+        self.ticks = int(cfg.horizon_h * 60 / cfg.tick_min)
+        self.t_h = np.arange(self.ticks) * cfg.tick_min / 60.0
+        self.reset()
+
+    def _validate_scenario_targets(self) -> None:
+        """Event fields validate themselves, but only the sim knows the
+        topology — catch an out-of-range aisle target here instead of an
+        IndexError hours into the drill."""
+        for ev in self.scenario.events:
+            if (isinstance(ev, FailureEvent) and ev.kind in ("ahu", "thermal")
+                    and ev.target >= self.dc.n_aisles):
+                raise ValueError(
+                    f"{ev.kind} failure targets aisle {ev.target}, but the "
+                    f"datacenter has {self.dc.n_aisles} aisles")
+
+    def _inject_scripted_vms(self) -> None:
+        """Append Scenario VMArrival events to the generated workload."""
+        vid = len(self.work.vms)
+        for ev in self.scenario.vm_arrivals():
+            vm = VMSpec(vid, ev.kind, ev.customer, arrival_h=ev.arrival_h,
+                        lifetime_h=ev.lifetime_h, peak_util=ev.peak_util)
+            self.work.vms.append(vm)
+            if ev.kind == "saas":
+                self.work.endpoints.setdefault(ev.customer, []).append(vid)
+            vid += 1
+
+    # ------------------------------------------------------------------
+    def reset(self) -> None:
+        """(Re)initialize all per-run mutable state; each ``run()`` (or
+        external step sequence) after a reset is deterministic.
+
+        A custom ``control`` passed as a *factory* is rebuilt here; a bare
+        policy instance is reused as-is and keeps whatever internal state
+        (affinity memory, RNG position) it accumulated — pass a factory if
+        you rerun the same sim."""
+        cfg = self.cfg
+        if cfg.control is None:
+            self.policy: ControlPolicy = build_control_policy(
+                cfg.policy, tick_s=cfg.tick_min * 60.0, seed=cfg.seed)
+        elif isinstance(cfg.control, type) or (
+                callable(cfg.control)
+                and not isinstance(cfg.control, ControlPolicy)):
+            # a policy class or any other zero-arg factory: build fresh
+            # (isinstance(SomeClass, Protocol) is True for the class object
+            # itself, so classes must be caught before the protocol check)
+            self.policy = cfg.control()
+        else:
+            self.policy = cfg.control
         self.alloc_state = AllocatorState.empty(self.dc, self.thermal,
                                                 self.power)
-        self.allocator = (TapasAllocator(seed=cfg.seed) if cfg.policy.place
-                          else BaselineAllocator(seed=cfg.seed))
-        self.router = (TapasRouter() if cfg.policy.route
-                       else BaselineRouter())
-        self.configurator = InstanceConfigurator(tick_s=cfg.tick_min * 60.0)
-        self.nominal = P._entry(P.NOMINAL)
+        self.tick = 0
+        t_out = np.array(outside_temperature(cfg.dc.region, self.t_h,
+                                             seed=cfg.seed))
+        if any(isinstance(ev, WeatherShift) for ev in self.scenario.events):
+            t_out = t_out + np.array([self.scenario.weather_delta(float(t))
+                                      for t in self.t_h])
+        self._t_out = t_out
+        # event queues: O(log n) pops instead of pop(0)/rebuild-and-remove
+        self._evseq = itertools.count()
+        self._pending = [(vm.arrival_h, next(self._evseq), vm)
+                         for vm in self.work.vms]
+        heapq.heapify(self._pending)
+        self._departures: list = []   # heap of (depart_h, seq, srv, vm)
+        self._ep_servers: dict[str, list] = {e: []
+                                             for e in self.work.endpoints}
+        self._server_ep: dict[int, str] = {}
+        self._vm_on: dict[int, VMSpec] = {}     # server -> resident VM
+        self._freq_cap = np.ones(self.dc.n_servers)
+        self._last_util = np.zeros(self.dc.n_servers)
+        # engine bindings carry live queues/stats that reset() cannot
+        # rewind, so they are per-run: reattach after each reset
+        self.backends: dict = {}   # server -> serving.backend.EngineBackend
+        self._backends_synced: set = set()
+        # accumulators
+        self._max_temp = np.zeros(self.ticks)
+        self._peak_row = np.zeros(self.ticks)
+        self._row_frac_t = np.zeros((self.ticks, self.dc.n_rows))
+        self._th_events = self._pw_events = 0
+        self._th_capped = self._pw_capped = 0
+        self._occupied_acc = 0
+        self._unserved_total = self._demand_total = 0.0
+        self._quality_acc = self._quality_w = 0.0
+        self._iaas_impact = self._saas_impact = 0.0
+
+    def attach_backend(self, server: int, backend) -> None:
+        """Bind a real serving engine (``serving.backend.EngineBackend``)
+        to a simulated SaaS server: reconfigure decisions for that server
+        are mirrored onto the engine's knobs, and the engine's measured
+        goodput is reported back into ``ClusterState.measured_goodput``.
+
+        Bindings last until the next ``reset()`` — an engine's queue and
+        stats cannot be rewound, so a rerun starts unbound."""
+        self.backends[int(server)] = backend
 
     # ------------------------------------------------------------------
-    def run(self) -> SimResult:
+    # observe: arrivals/departures + telemetry -> ClusterState
+    # ------------------------------------------------------------------
+    def observe(self) -> ClusterState:
+        cfg, dc, th = self.cfg, self.dc, self.thermal
+        ti = self.tick
+        now = float(self.t_h[ti])
+        state = self._begin_state(ti, now)
+
+        # -- arrivals / departures -----------------------------------
+        while self._pending and self._pending[0][0] <= now:
+            _, _, vm = heapq.heappop(self._pending)
+            srv = self.policy.place(state, vm)
+            if srv is not None:
+                heapq.heappush(self._departures,
+                               (vm.arrival_h + vm.lifetime_h,
+                                next(self._evseq), srv, vm))
+                self._vm_on[srv] = vm
+                if vm.kind == "saas":
+                    self._ep_servers[vm.customer].append(srv)
+                    self._server_ep[srv] = vm.customer
+        while self._departures and self._departures[0][0] <= now:
+            _, _, srv, vm = heapq.heappop(self._departures)
+            self.alloc_state.release(srv)
+            self._vm_on.pop(srv, None)
+            if vm.kind == "saas" and srv in self._server_ep:
+                self._ep_servers[self._server_ep.pop(srv)].remove(srv)
+            self.policy.release(state, srv)
+
+        kind = state.kind
+        self._occupied_acc += int((kind > 0).sum())
+
+        # -- IaaS utilization: maintained server -> vm map -----------
+        util_srv = np.zeros(dc.n_servers)
+        for srv, vm in self._vm_on.items():
+            if vm.kind == "iaas":
+                util_srv[srv] = iaas_util(vm, np.asarray([now]),
+                                          seed=cfg.seed)[0]
+        state.iaas_util = util_srv
+
+        # -- instance telemetry + capacity/risk forecasts ------------
+        self.policy.begin_tick(state)
+        dc_load_prev = float(self._last_util.mean())
+        state.inlet_est = np.asarray(th.inlet_temp(
+            self._t_out[ti], dc_load_prev,
+            cooling_derate=state.cooling_extra_c))
+        state.risk = server_risk(
+            dc, th, self.power, inlet=state.inlet_est,
+            prov_row_power_w=state.prov_row_power_w,
+            prov_aisle_cfm=state.prov_aisle_cfm,
+            util=np.maximum(util_srv, self._last_util), kind=kind)
+        # Eq. 2-derived per-server load ceilings: thermal-aware routing
+        # can never push a server past its thermal cap
+        state.u_max = np.asarray(th.max_util_for_temp(
+            state.inlet_est, th.gpu_limit - 3.0))
+        return state
+
+    def _begin_state(self, ti: int, now: float) -> ClusterState:
+        """Construct the tick's state: occupancy views + scenario-derived
+        failure derates (available to ``place`` before telemetry)."""
+        dc = self.dc
+        ahu_derate = np.ones(dc.n_aisles)
+        ups_derate = np.ones(dc.n_rows)
+        cooling_extra = 0.0
+        emergency = False
+        for f in self.scenario.failures(now):
+            emergency = True
+            if f.kind == "ahu":
+                n = dc.cfg.ahus_per_aisle
+                ahu_derate[f.target] = (n - 1) / n
+            elif f.kind == "ups":
+                ups_derate[:] = 0.75                 # 4N/3 failover
+            elif f.kind == "cooling":
+                cooling_extra = 3.0
+            elif f.kind == "thermal":
+                # paper §5.4 thermal emergency: ~90% cooling capacity
+                # (an AHU loss in one aisle + DC-level cooling strain)
+                n = dc.cfg.ahus_per_aisle
+                ahu_derate[f.target] = (n - 1) / n
+                cooling_extra = 2.5
+        return ClusterState(
+            tick=ti, now_h=now, t_outside_c=float(self._t_out[ti]),
+            seed=self.cfg.seed, dc=dc, nominal=self.nominal,
+            alloc=self.alloc_state, kind=self.alloc_state.kind_of,
+            vm_of=self.alloc_state.vm_of, endpoints=self._ep_servers,
+            emergency=emergency, ahu_derate=ahu_derate,
+            ups_derate=ups_derate, cooling_extra_c=cooling_extra,
+            prov_row_power_w=dc.prov_row_power_w * ups_derate,
+            prov_aisle_cfm=dc.prov_ahu_cfm * ahu_derate,
+            freq_cap=self._freq_cap, last_util=self._last_util,
+            saas_load=np.zeros(dc.n_servers),
+            quality=np.ones(dc.n_servers))
+
+    # ------------------------------------------------------------------
+    # route: endpoint demand through the policy
+    # ------------------------------------------------------------------
+    def route(self, state: ClusterState) -> None:
         cfg = self.cfg
-        dc, th, pm = self.dc, self.thermal, self.power
-        chips = dc.cfg.hw.chips
+        now = state.now_h
+        for ep, servers in state.endpoints.items():
+            if not servers:
+                continue
+            demand = (endpoint_load(ep, np.asarray([now]),
+                                    seed=cfg.seed)[0]
+                      * len(servers) * cfg.demand_scale)
+            surge = self.scenario.demand_scale(now, ep)
+            if surge != 1.0:
+                demand = demand * surge
+            out = self.policy.route(state, ep, demand)
+            state.saas_load[out.servers] = out.load
+            state.quality[out.servers] = out.quality
+            self._unserved_total += out.unserved
+            self._demand_total += demand
+            self._quality_acc += float((out.load * out.quality).sum())
+            self._quality_w += float(out.load.sum())
+
+    # ------------------------------------------------------------------
+    # apply: physics, throttling, capping
+    # ------------------------------------------------------------------
+    def apply(self, state: ClusterState) -> None:
+        cfg, dc, th, pm = self.cfg, self.dc, self.thermal, self.power
+        ti = state.tick
         s = dc.n_servers
-        ticks = int(cfg.horizon_h * 60 / cfg.tick_min)
-        t_h = np.arange(ticks) * cfg.tick_min / 60.0
-        t_out = np.asarray(outside_temperature(cfg.dc.region, t_h,
-                                               seed=cfg.seed))
+        chips = dc.cfg.hw.chips
+        kind = state.kind
+        iaas_mask = kind == 1
+        freq_cap = self._freq_cap
+        util_srv = state.iaas_util
+        saas_load = state.saas_load
+        prov_air = state.prov_aisle_cfm
+        prov_pwr = state.prov_row_power_w
 
-        # event queues: O(log n) pops instead of pop(0)/rebuild-and-remove
-        evseq = itertools.count()
-        pending = [(vm.arrival_h, next(evseq), vm) for vm in self.work.vms]
-        heapq.heapify(pending)
-        departures: list = []   # heap of (depart_h, seq, srv, vm)
-        ep_servers: dict[str, list] = {e: [] for e in self.work.endpoints}
-        server_ep: dict[int, str] = {}
-        freq_cap = np.ones(s)           # persistent power-cap state
-        last_util = np.zeros(s)         # previous-tick mean chip util
-        affinity: dict[str, np.ndarray] = {}
+        # -- chip utilization --------------------------------------
+        chip_util = np.zeros((s, chips))
+        # IaaS: capped clocks scale both work done and draw
+        chip_util[iaas_mask] = (util_srv[iaas_mask]
+                                * freq_cap[iaas_mask])[:, None]
+        for srv in np.flatnonzero(kind == 2):
+            e = state.instances[int(srv)].entry
+            cap = (e.goodput / self.nominal.goodput) * freq_cap[srv]
+            busy = min(saas_load[srv] / max(cap, 1e-9), 1.0)
+            tp = e.cfg.tp
+            # e.temp is the per-active-chip utilization-equivalent of
+            # this config at full busy (work concentrates at low TP)
+            chip_util[srv, :tp] = min(busy * e.temp, 1.0)
+        chip_util = np.clip(chip_util, 0.0, 1.0)
 
-        max_temp = np.zeros(ticks)
-        peak_row = np.zeros(ticks)
-        row_frac_t = np.zeros((ticks, dc.n_rows))
-        th_events = pw_events = 0
-        th_capped = pw_capped = 0
-        occupied_acc = 0        # occupied server-ticks, accumulated per tick
-        unserved_total = demand_total = 0.0
-        quality_acc = quality_w = 0.0
-        iaas_impact = saas_impact = 0.0
+        # -- physics -----------------------------------------------
+        power_s = np.asarray(pm.server_power(chip_util))
+        power_s = np.where(kind > 0, power_s, 0.12 * dc.cfg.hw.idle_power_w)
+        p_row = dc.row_sum(power_s)
+        dc_load = float(power_s.sum()
+                        / (dc.cfg.hw.peak_power_w * s))
+        inlet = np.asarray(th.inlet_temp(self._t_out[ti], dc_load,
+                                         cooling_derate=state.cooling_extra_c))
+        t_gpu = np.array(th.gpu_temp(inlet, chip_util))
+        air = np.asarray(th.airflow(chip_util.mean(axis=1)))
+        air = np.where(kind > 0, air, th.airflow_idle * 0.5)
+        a_air = dc.aisle_sum(air)
 
-        for ti in range(ticks):
-            now = t_h[ti]
-            # -- arrivals / departures ---------------------------------
-            while pending and pending[0][0] <= now:
-                _, _, vm = heapq.heappop(pending)
-                srv = self.allocator.place(self.alloc_state, vm, seed=cfg.seed)
-                if srv is not None:
-                    heapq.heappush(departures, (vm.arrival_h + vm.lifetime_h,
-                                                next(evseq), srv, vm))
-                    if vm.kind == "saas":
-                        ep_servers[vm.customer].append(srv)
-                        server_ep[srv] = vm.customer
-            while departures and departures[0][0] <= now:
-                _, _, srv, vm = heapq.heappop(departures)
-                self.alloc_state.release(srv)
-                if vm.kind == "saas" and srv in server_ep:
-                    ep_servers[server_ep.pop(srv)].remove(srv)
-                self.configurator.reset(srv)
+        # heat recirculation: aisles over provisioned airflow push inlet
+        recirc = np.maximum(a_air / np.maximum(prov_air, 1.0) - 1.0, 0.0)
+        t_gpu += (6.0 * recirc)[dc.aisle_of][:, None]
 
-            kind = self.alloc_state.kind_of
-            iaas_mask = kind == 1
-            occupied_acc += int((kind > 0).sum())
+        # -- throttling / capping ----------------------------------
+        hot_srv = (t_gpu.max(axis=1) >= dc.cfg.hw.gpu_temp_limit_c) & (kind > 0)
+        over_row = p_row > prov_pwr
+        # record the *demanded* (pre-throttle) peak — what the load asked
+        # for; hardware clamps the realized temperature at the limit
+        self._max_temp[ti] = (float(t_gpu[kind > 0].max())
+                              if (kind > 0).any() else 0.0)
+        self._th_events += int(hot_srv.sum())
+        self._pw_events += int(over_row.sum())
+        self._th_capped += int(hot_srv.sum())
+        self._pw_capped += int(((over_row[dc.row_of]) & (kind > 0)).sum())
 
-            # -- failure state -----------------------------------------
-            ahu_derate = np.ones(dc.n_aisles)
-            ups_derate = np.ones(dc.n_rows)
-            cooling_extra = 0.0
-            emergency = False
-            for f in cfg.failures:
-                if f.start_h <= now < f.end_h:
-                    emergency = True
-                    if f.kind == "ahu":
-                        n = dc.cfg.ahus_per_aisle
-                        ahu_derate[f.target] = (n - 1) / n
-                    elif f.kind == "ups":
-                        ups_derate[:] = 0.75                 # 4N/3 failover
-                    elif f.kind == "cooling":
-                        cooling_extra = 3.0
-                    elif f.kind == "thermal":
-                        # paper §5.4 thermal emergency: ~90% cooling capacity
-                        # (an AHU loss in one aisle + DC-level cooling strain)
-                        n = dc.cfg.ahus_per_aisle
-                        ahu_derate[f.target] = (n - 1) / n
-                        cooling_extra = 2.5
-            prov_air = dc.prov_ahu_cfm * ahu_derate
-            prov_pwr = dc.prov_row_power_w * ups_derate
-
-            # -- IaaS utilization --------------------------------------
-            util_srv = np.zeros(s)
-            for _, _, srv, vm in departures:
-                if vm.kind == "iaas" and self.alloc_state.vm_of[srv] == vm.vm_id:
-                    util_srv[srv] = iaas_util(vm, np.asarray([now]),
-                                              seed=cfg.seed)[0]
-
-            # -- capacity + risk for SaaS routing ----------------------
-            self.configurator.tick()
-            dc_load_prev = float(last_util.mean())
-            inlet_est = np.asarray(th.inlet_temp(
-                t_out[ti], dc_load_prev, cooling_derate=cooling_extra))
-            risk_srv = self._risk(inlet_est, freq_cap, prov_pwr, prov_air,
-                                  np.maximum(util_srv, last_util), kind)
-
-            # -- route endpoint demand ---------------------------------
-            # TAPAS routing sees Eq. 2-derived per-server load ceilings so
-            # energy-packing can never push a server past its thermal cap
-            u_max = np.asarray(th.max_util_for_temp(
-                inlet_est, th.gpu_limit - 3.0))
-            saas_load = np.zeros(s)
-            quality_srv = np.ones(s)
-            for ep, servers in ep_servers.items():
-                if not servers:
-                    continue
-                idx = np.asarray(servers)
-                demand = (endpoint_load(ep, np.asarray([now]),
-                                        seed=cfg.seed)[0]
-                          * len(servers) * cfg.demand_scale)
-                caps, quals = [], []
-                for srv in idx:
-                    st = self.configurator.get(srv)
-                    e = st.entry
-                    paused = st.pause_ticks > 0
-                    cap = (0.0 if paused else
-                           (e.goodput / self.nominal.goodput) * freq_cap[srv])
-                    if cfg.policy.route and cap > 0:
-                        busy_max = min(u_max[srv] / max(e.temp, 1e-6), 1.0)
-                        cap *= busy_max
-                    caps.append(cap)
-                    quals.append(e.quality)
-                caps = np.asarray(caps)
-                aff = affinity.get(ep)
-                if aff is None or len(aff) != len(idx):
-                    aff = np.zeros(len(idx))
-                dec = self.router.route(demand, caps, risk_srv[idx], aff)
-                saas_load[idx] = dec.load
-                quality_srv[idx] = np.asarray(quals)
-                affinity[ep] = dec.load.copy()
-                unserved_total += dec.unserved
-                demand_total += demand
-                quality_acc += float((dec.load * np.asarray(quals)).sum())
-                quality_w += float(dec.load.sum())
-
-            # -- instance configuration (TAPAS) ------------------------
-            if cfg.policy.config:
-                hot = risk_srv > 0.45
-                for srv in np.flatnonzero((kind == 2) & hot):
-                    margin = 1.0 - risk_srv[srv]
-                    self.configurator.decide(
-                        int(srv),
-                        power_cap=max(0.6, margin + 0.45),
-                        temp_cap=max(0.6, margin + 0.45),
-                        emergency=emergency,
-                        min_goodput=float(saas_load[srv])
-                        * self.nominal.goodput)
-                # restore drained servers once their risk clears
-                cool = risk_srv < 0.25
-                for srv in np.flatnonzero((kind == 2) & cool):
-                    st = self.configurator.state.get(int(srv))
-                    if st is not None and st.current != P.NOMINAL:
-                        self.configurator.decide(int(srv), power_cap=1.0,
-                                                 temp_cap=1.35)
-
-            # -- chip utilization --------------------------------------
-            chip_util = np.zeros((s, chips))
-            # IaaS: capped clocks scale both work done and draw
-            chip_util[iaas_mask] = (util_srv[iaas_mask]
-                                    * freq_cap[iaas_mask])[:, None]
-            for srv in np.flatnonzero(kind == 2):
-                st = self.configurator.get(int(srv))
-                e = st.entry
-                cap = (e.goodput / self.nominal.goodput) * freq_cap[srv]
-                busy = min(saas_load[srv] / max(cap, 1e-9), 1.0)
-                tp = e.cfg.tp
-                # e.temp is the per-active-chip utilization-equivalent of
-                # this config at full busy (work concentrates at low TP)
-                chip_util[srv, :tp] = min(busy * e.temp, 1.0)
-            chip_util = np.clip(chip_util, 0.0, 1.0)
-
-            # -- physics -----------------------------------------------
+        # hardware thermal throttling clamps the hot server within the
+        # tick: cut util to the Eq. 2 inversion at the limit, redo physics
+        clamp = np.ones(s)
+        if hot_srv.any():
+            u_lim = np.asarray(th.max_util_for_temp(
+                inlet, dc.cfg.hw.gpu_temp_limit_c))
+            cur = chip_util.max(axis=1)
+            clamp = np.where(hot_srv, np.minimum(
+                u_lim / np.maximum(cur, 1e-6), 1.0), 1.0)
+            chip_util = chip_util * clamp[:, None]
             power_s = np.asarray(pm.server_power(chip_util))
-            power_s = np.where(kind > 0, power_s, 0.12 * dc.cfg.hw.idle_power_w)
+            power_s = np.where(kind > 0, power_s,
+                               0.12 * dc.cfg.hw.idle_power_w)
             p_row = dc.row_sum(power_s)
-            dc_load = float(power_s.sum()
-                            / (dc.cfg.hw.peak_power_w * s))
-            inlet = np.asarray(th.inlet_temp(t_out[ti], dc_load,
-                                             cooling_derate=cooling_extra))
             t_gpu = np.array(th.gpu_temp(inlet, chip_util))
-            air = np.asarray(th.airflow(chip_util.mean(axis=1)))
-            air = np.where(kind > 0, air, th.airflow_idle * 0.5)
-            a_air = dc.aisle_sum(air)
-
-            # heat recirculation: aisles over provisioned airflow push inlet
-            recirc = np.maximum(a_air / np.maximum(prov_air, 1.0) - 1.0, 0.0)
             t_gpu += (6.0 * recirc)[dc.aisle_of][:, None]
+            # throttling costs served throughput on SaaS servers
+            loss = saas_load * (1.0 - clamp)
+            self._unserved_total += float(loss[kind == 2].sum())
+            saas_load = saas_load - loss
+            state.saas_load = saas_load
 
-            # -- throttling / capping ----------------------------------
-            hot_srv = (t_gpu.max(axis=1) >= dc.cfg.hw.gpu_temp_limit_c) & (kind > 0)
-            over_row = p_row > prov_pwr
-            # record the *demanded* (pre-throttle) peak — what the load asked
-            # for; hardware clamps the realized temperature at the limit
-            max_temp[ti] = (float(t_gpu[kind > 0].max())
-                            if (kind > 0).any() else 0.0)
-            th_events += int(hot_srv.sum())
-            pw_events += int(over_row.sum())
-            th_capped += int(hot_srv.sum())
-            pw_capped += int(((over_row[dc.row_of]) & (kind > 0)).sum())
+        # power capping: baseline caps every server in the row uniformly;
+        # TAPAS caps IaaS only (SaaS was already reconfigured/steered)
+        iaas_only = (cfg.iaas_only_capping if cfg.iaas_only_capping
+                     is not None else cfg.policy.config)
+        mask = iaas_mask if iaas_only else (kind > 0)
+        factors = np.asarray(capping_factors(
+            dc, power_s, prov_pwr, pm,
+            iaas_only_mask=mask))
+        new_cap = np.clip(freq_cap * factors, 0.3, 1.0)
+        freq_cap = np.where(factors < 1.0, new_cap,
+                            np.minimum(freq_cap * 1.1, 1.0))
+        self._freq_cap = freq_cap
+        state.freq_cap = freq_cap
 
-            # hardware thermal throttling clamps the hot server within the
-            # tick: cut util to the Eq. 2 inversion at the limit, redo physics
-            clamp = np.ones(s)
-            if hot_srv.any():
-                u_lim = np.asarray(th.max_util_for_temp(
-                    inlet, dc.cfg.hw.gpu_temp_limit_c))
-                cur = chip_util.max(axis=1)
-                clamp = np.where(hot_srv, np.minimum(
-                    u_lim / np.maximum(cur, 1e-6), 1.0), 1.0)
-                chip_util = chip_util * clamp[:, None]
-                power_s = np.asarray(pm.server_power(chip_util))
-                power_s = np.where(kind > 0, power_s,
-                                   0.12 * dc.cfg.hw.idle_power_w)
-                p_row = dc.row_sum(power_s)
-                t_gpu = np.array(th.gpu_temp(inlet, chip_util))
-                t_gpu += (6.0 * recirc)[dc.aisle_of][:, None]
-                # throttling costs served throughput on SaaS servers
-                loss = saas_load * (1.0 - clamp)
-                unserved_total += float(loss[kind == 2].sum())
-                saas_load = saas_load - loss
+        # perf impact = power-cap depth + in-tick thermal-clamp depth
+        cap_depth = (1.0 - freq_cap) + (1.0 - clamp)
+        self._iaas_impact += (float(cap_depth[iaas_mask].mean())
+                              if iaas_mask.any() else 0.0)
+        saas_mask = kind == 2
+        self._saas_impact += (float(cap_depth[saas_mask].mean())
+                              if saas_mask.any() else 0.0)
 
-            # power capping: baseline caps every server in the row uniformly;
-            # TAPAS caps IaaS only (SaaS was already reconfigured/steered)
-            mask = iaas_mask if cfg.policy.config else (kind > 0)
-            factors = np.asarray(capping_factors(
-                dc, power_s, prov_pwr, pm,
-                iaas_only_mask=mask))
-            new_cap = np.clip(freq_cap * factors, 0.3, 1.0)
-            freq_cap = np.where(factors < 1.0, new_cap,
-                                np.minimum(freq_cap * 1.1, 1.0))
+        rowf = p_row / np.maximum(dc.prov_row_power_w, 1.0)
+        self._row_frac_t[ti] = rowf
+        self._peak_row[ti] = float(rowf.max())
+        self._last_util = chip_util.mean(axis=1)
 
-            # perf impact = power-cap depth + in-tick thermal-clamp depth
-            cap_depth = (1.0 - freq_cap) + (1.0 - clamp)
-            iaas_impact += float(cap_depth[iaas_mask].mean()) if iaas_mask.any() else 0.0
-            saas_mask = kind == 2
-            saas_impact += float(cap_depth[saas_mask].mean()) if saas_mask.any() else 0.0
+        # post-physics telemetry for external drivers
+        state.last_util = self._last_util
+        state.max_gpu_temp_c = self._max_temp[ti]
+        state.row_power_frac = rowf
+        state.thermal_throttled = hot_srv
+        state.power_over_rows = over_row
 
-            rowf = p_row / np.maximum(dc.prov_row_power_w, 1.0)
-            row_frac_t[ti] = rowf
-            peak_row[ti] = float(rowf.max())
-            last_util = chip_util.mean(axis=1)
+    # ------------------------------------------------------------------
+    def step(self) -> ClusterState:
+        """Advance one tick; returns the tick's ``ClusterState``."""
+        if self.tick >= self.ticks:
+            raise RuntimeError(
+                f"simulation horizon reached ({self.ticks} ticks); "
+                f"call reset() to rerun")
+        state = self.observe()
+        self.route(state)
+        changes = self.policy.reconfigure(state)
+        # fold the decisions into the instance telemetry so the contract is
+        # "return your changes" — policies need not also mutate
+        # state.instances (the built-in adapter does both, identically)
+        for ch in changes:
+            state.instances[ch.server] = InstanceView(entry=ch.entry,
+                                                      paused=ch.reloading)
+        if self.backends:
+            self._sync_backends(state, changes)
+        self.apply(state)
+        self.tick += 1
+        return state
 
+    def _sync_backends(self, state: ClusterState, changes: list) -> None:
+        """Mirror reconfigure decisions onto bound engines and report the
+        engines' measured goodput back into the state."""
+        for ch in changes:
+            backend = self.backends.get(ch.server)
+            if backend is not None:
+                backend.apply_config(ch.entry.cfg, paused=ch.reloading)
+                self._backends_synced.add(ch.server)
+        for srv, backend in self.backends.items():
+            inst = state.instances.get(srv)
+            if srv not in self._backends_synced and inst is not None:
+                # first tick after attach: push the server's *current*
+                # config — it may have been reconfigured before binding
+                backend.apply_config(inst.entry.cfg, paused=inst.paused)
+                self._backends_synced.add(srv)
+            if inst is not None:
+                # track the reload drain: paused while pause_ticks run,
+                # admitting again as soon as the configurator's view clears
+                backend.engine.knobs.paused = inst.paused
+            load = (float(state.saas_load[srv])
+                    if state.kind[srv] == 2 else 0.0)
+            backend.pump(now=state.now_h, load=load)
+            state.measured_goodput[srv] = backend.measured_goodput()
+
+    def result(self) -> SimResult:
+        """Aggregate the ticks simulated so far into a SimResult."""
+        if self.tick == 0:
+            raise RuntimeError(
+                "no ticks simulated yet; call step() or run() first")
+        done = self.tick
         # normalize capped-event counts by the true occupied server-ticks
         # (summed per tick — occupancy drifts as VMs arrive and depart)
-        occupied_ticks = max(occupied_acc, 1)
+        occupied_ticks = max(self._occupied_acc, 1)
         return SimResult(
-            time_h=t_h,
-            max_gpu_temp=max_temp,
-            peak_row_power_frac=peak_row,
-            thermal_events=th_events,
-            power_events=pw_events,
-            thermal_capped_frac=th_capped / occupied_ticks,
-            power_capped_frac=pw_capped / occupied_ticks,
-            unserved_frac=unserved_total / max(demand_total, 1e-9),
-            mean_quality=quality_acc / max(quality_w, 1e-9),
-            iaas_perf_impact=iaas_impact / ticks,
-            saas_perf_impact=saas_impact / ticks,
-            row_power_frac=row_frac_t,
+            time_h=self.t_h[:self.tick],
+            max_gpu_temp=self._max_temp[:self.tick],
+            peak_row_power_frac=self._peak_row[:self.tick],
+            thermal_events=self._th_events,
+            power_events=self._pw_events,
+            thermal_capped_frac=self._th_capped / occupied_ticks,
+            power_capped_frac=self._pw_capped / occupied_ticks,
+            unserved_frac=self._unserved_total / max(self._demand_total, 1e-9),
+            mean_quality=self._quality_acc / max(self._quality_w, 1e-9),
+            iaas_perf_impact=self._iaas_impact / done,
+            saas_perf_impact=self._saas_impact / done,
+            row_power_frac=self._row_frac_t[:self.tick],
         )
 
-    # ------------------------------------------------------------------
-    def _risk(self, inlet, freq_cap, prov_pwr, prov_air, iaas_util_now, kind):
-        """Per-server violation risk in [0,1] from Eqs. 1–4 forecasts."""
-        dc, th, pm = self.dc, self.thermal, self.power
-        s = dc.n_servers
-        chips = dc.cfg.hw.chips
-        # server-level: temperature forecast at moderately increased load
-        # (full-load forecasts mark nearly every warm server risky and
-        # starve routing; the paper routes on *violation risk*, not worst case)
-        probe = np.clip(iaas_util_now + 0.35, 0.0, 1.0)
-        t_probe = np.asarray(th.gpu_temp(
-            inlet, np.repeat(probe[:, None], chips, axis=1))).max(axis=1)
-        t_risk = 1.0 / (1.0 + np.exp(-(t_probe - th.gpu_limit) / 2.0))
-        # row-level: graded power risk — engages well before the envelope so
-        # packing prefers cold rows and hot rows shed SaaS load (§4.2 Row)
-        pwr = np.asarray(pm.server_power(
-            np.repeat(iaas_util_now[:, None], chips, axis=1)))
-        pwr = np.where(kind > 0, pwr, 0.0)
-        rowp = dc.row_sum(pwr)
-        row_frac = rowp / np.maximum(prov_pwr, 1.0)
-        # relative balancing: above-fleet-average rows repel load long before
-        # the envelope, plus a hard ramp approaching the limit itself
-        rel = np.clip((row_frac - row_frac.mean()) / 0.25, 0.0, 1.0)
-        near = np.clip((row_frac - 0.85) / 0.15, 0.0, 1.0)
-        p_risk = np.maximum(rel * 0.7, near)[dc.row_of]
-        # aisle airflow headroom
-        air = np.asarray(th.airflow(iaas_util_now))
-        a_air = dc.aisle_sum(np.where(kind > 0, air, 0.0))
-        n_per_aisle = dc.aisle_sum((kind > 0).astype(float))
-        a_head = (prov_air - a_air) / np.maximum(
-            n_per_aisle * th.airflow_max, 1.0)
-        a_risk = np.clip(0.8 - a_head, 0.0, 1.0)[dc.aisle_of]
-        return np.maximum.reduce([t_risk, p_risk, a_risk])
+    def run(self) -> SimResult:
+        if self.tick:
+            self.reset()
+        while self.tick < self.ticks:
+            self.step()
+        return self.result()
 
 
 def run_policy(policy: Policy, **kw) -> SimResult:

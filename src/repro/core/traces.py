@@ -9,9 +9,20 @@
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import zlib
+from dataclasses import dataclass
 
 import numpy as np
+
+
+def _stable_seed(*parts) -> int:
+    """Process-stable 32-bit seed for string-keyed traces.
+
+    ``hash(str)`` is randomized per interpreter process, which made trace
+    phases — and therefore every simulation metric — unreproducible across
+    runs of the same seed.  CRC32 of the repr is stable everywhere.
+    """
+    return zlib.crc32(repr(parts).encode())
 
 
 @dataclass
@@ -90,7 +101,7 @@ def iaas_util(vm: VMSpec, t_h: np.ndarray, *, seed: int = 0) -> np.ndarray:
     """Diurnal utilization trace in [0,1] for an IaaS VM (Fig. 13a)."""
     key = (vm.customer, seed)  # cache keyed by seed: cross-run determinism
     if key not in _CUST_PHASE:
-        rng = np.random.default_rng(abs(hash(key)) % 2**32)
+        rng = np.random.default_rng(_stable_seed(*key))
         _CUST_PHASE[key] = float(rng.uniform(0, 24))
     phase = _CUST_PHASE[key]
     rng = np.random.default_rng((vm.vm_id, seed))
@@ -103,13 +114,13 @@ def iaas_util(vm: VMSpec, t_h: np.ndarray, *, seed: int = 0) -> np.ndarray:
 def endpoint_load(name: str, t_h: np.ndarray, *, seed: int = 0) -> np.ndarray:
     """Aggregate request load for a SaaS endpoint, normalized to [0,1]
     per-VM-equivalent units (1.0 == every VM fully busy)."""
-    rng = np.random.default_rng(abs(hash((name, seed))) % 2**32)
+    rng = np.random.default_rng(_stable_seed(name, seed))
     phase = rng.uniform(7, 11)  # business-hours peak
     sharp = rng.uniform(1.2, 2.2)
     base = 0.45 + 0.55 * np.maximum(
         np.sin(2 * np.pi * (t_h - phase) / 24.0), 0.0) ** sharp
     spikes = (rng.random(np.shape(t_h)) < 0.01) * rng.uniform(0.15, 0.35)
-    noise = 0.05 * np.random.default_rng((abs(hash(name)) % 997, seed)) \
+    noise = 0.05 * np.random.default_rng((_stable_seed(name) % 997, seed)) \
         .standard_normal(np.shape(t_h))
     return np.clip(base + spikes + noise, 0.05, 1.0)
 

@@ -24,6 +24,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="TAPAS batch knob (default: --slots)")
+    ap.add_argument("--freq-scale", type=float, default=1.0,
+                    help="TAPAS frequency knob (1.0 = nominal clock)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged KV pool block size (tokens)")
     mode = ap.add_mutually_exclusive_group()
@@ -41,8 +45,10 @@ def main(argv=None) -> dict:
     plan = local_plan(param_dtype=jnp.bfloat16)
     model = build_model(cfg, plan)
     params = model.init(jax.random.PRNGKey(0))
+    knobs = EngineKnobs(max_batch=args.max_batch or args.slots,
+                        freq_scale=args.freq_scale)
     eng = Engine(model, params, max_seq=args.max_seq, n_slots=args.slots,
-                 knobs=EngineKnobs(max_batch=args.slots), paged=args.paged,
+                 knobs=knobs, paged=args.paged,
                  block_size=args.block_size)
 
     rng = np.random.default_rng(0)

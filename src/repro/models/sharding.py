@@ -11,7 +11,7 @@ not divide the TP degree are zero-padded (see DESIGN.md §3).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
 from typing import Any
 

@@ -13,7 +13,6 @@ HBM at train time.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any
 
 import jax

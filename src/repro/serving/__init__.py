@@ -1,6 +1,7 @@
+from repro.serving.backend import EngineBackend
 from repro.serving.engine import Engine, EngineKnobs, EngineStats
 from repro.serving.kvcache import CachePool, PagedCachePool
 from repro.serving.request import Request
 
-__all__ = ["Engine", "EngineKnobs", "EngineStats", "CachePool",
-           "PagedCachePool", "Request"]
+__all__ = ["Engine", "EngineBackend", "EngineKnobs", "EngineStats",
+           "CachePool", "PagedCachePool", "Request"]

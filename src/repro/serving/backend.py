@@ -1,0 +1,116 @@
+"""Engine-in-the-loop backend: a real serving Engine as a simulated SaaS
+server.
+
+``EngineBackend`` binds one ``serving.Engine`` (with its ``EngineKnobs``)
+to a server inside ``ClusterSim``.  Each tick the simulator
+
+* mirrors the control plane's ``reconfigure()`` decisions onto the engine —
+  a ``ConfigPoint`` becomes ``set_variant`` / ``max_batch`` / ``freq_scale``
+  (plus ``paused`` while a reload drains), and
+* pumps the engine with requests proportional to the load the router
+  assigned to that server, then reports the engine's *measured* goodput
+  back into ``ClusterState.measured_goodput``.
+
+This closes the loop that ``profiles.measure_from_engine()`` opened: PR 1
+fed engine measurements into the profile tables offline; here the engine
+runs live inside the simulated datacenter and the control plane's
+decisions land on actual serving knobs.
+
+The backend is telemetry-only with respect to the physics: attaching
+engines never changes the simulated thermal/power trajectory, so
+simulation results stay reproducible with or without live engines.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.profiles import ConfigPoint
+from repro.serving.engine import Engine
+from repro.serving.request import Request
+
+
+class EngineBackend:
+    """Binds a real ``Engine`` to a simulated SaaS server.
+
+    ``variant_for_size`` maps profile model sizes ("70b"/"13b"/"7b") onto
+    engine variant names registered via ``Engine.add_variant``; sizes
+    without a mapping leave the variant untouched.  ``batch_for_knob``
+    maps the profile's batch axis onto engine ``max_batch`` values
+    (default: 1 -> 1, 16 -> half the lanes, 64 -> all lanes).
+    """
+
+    def __init__(self, engine: Engine, *,
+                 variant_for_size: dict | None = None,
+                 batch_for_knob: dict | None = None,
+                 requests_per_load: float = 3.0,
+                 steps_per_tick: int = 4,
+                 prompt_len: int = 6, max_new_tokens: int = 4,
+                 seed: int = 0):
+        n = engine.n_slots
+        self.engine = engine
+        self.variant_for_size = variant_for_size or {}
+        unknown = sorted(set(self.variant_for_size.values())
+                         - set(engine.variants))
+        if unknown:
+            raise ValueError(
+                f"variant_for_size names variants {unknown} not registered "
+                f"on the engine (has {sorted(engine.variants)}); a typo "
+                f"here would silently disable model swaps")
+        self.batch_for_knob = batch_for_knob or {1: 1, 16: max(1, n // 2),
+                                                 64: n}
+        self.requests_per_load = requests_per_load
+        self.steps_per_tick = steps_per_tick
+        self.prompt_len = prompt_len
+        self.max_new_tokens = max_new_tokens
+        self.rng = np.random.default_rng(seed)
+        self._next_id = 0
+        self._last_rate = 0.0
+        self.applied: list[ConfigPoint] = []   # reconfigure decisions seen
+
+    # -- control-plane side ------------------------------------------------
+    def apply_config(self, cfg: ConfigPoint, *, paused: bool = False) -> None:
+        """Translate a configurator decision into engine knob turns."""
+        knobs = self.engine.knobs
+        knobs.freq_scale = float(cfg.freq)
+        knobs.max_batch = int(self.batch_for_knob.get(
+            cfg.batch, self.engine.n_slots))
+        knobs.paused = bool(paused)
+        variant = self.variant_for_size.get(cfg.size)
+        if variant is not None and variant != knobs.variant:
+            self.engine.set_variant(variant)
+        self.applied.append(cfg)
+
+    # -- workload side -----------------------------------------------------
+    def pump(self, *, now: float, load: float) -> int:
+        """Feed demand proportional to the routed ``load`` (nominal-VM
+        units) and run scheduler steps; returns decode tokens produced.
+
+        Also measures this tick's decode rate (tokens per wall-second of
+        engine stepping, with the simulated frequency knob already folded
+        into the step times) so ``measured_goodput`` reflects the engine's
+        *current* capacity, not a lifetime average."""
+        vocab = self.engine.model.cfg.vocab_size
+        for _ in range(int(round(load * self.requests_per_load))):
+            self.engine.submit(Request(
+                prompt=[int(t) for t in self.rng.integers(
+                    0, vocab, self.prompt_len)],
+                max_new_tokens=self.max_new_tokens,
+                customer=f"bk{self._next_id % 4}", arrival_s=now))
+            self._next_id += 1
+        steps_before = len(self.engine.stats.step_times)
+        produced = 0
+        for _ in range(self.steps_per_tick):
+            if self.engine.knobs.paused and not self.engine.active:
+                break   # drained during a reload pause
+            produced += self.engine.step(now=now)
+        wall = sum(self.engine.stats.step_times[steps_before:])
+        # no steps ran (paused-and-drained, or idle) => the instance is
+        # serving nothing right now; report that, not the last busy rate
+        self._last_rate = produced / wall if wall > 0.0 else 0.0
+        return produced
+
+    def measured_goodput(self) -> float:
+        """Decode tokens per wall-second over the most recent ``pump``
+        window — responds immediately to knob turns (batch/variant change
+        tokens-per-step, ``freq_scale`` stretches the step times)."""
+        return self._last_rate

@@ -47,7 +47,9 @@ class EngineStats:
     prefill_tokens: int = 0
     decode_tokens: int = 0
     prefill_batches: int = 0     # jitted prefill launches (not requests)
-    preemptions: int = 0         # paged pool ran dry -> recompute later
+    preemptions: int = 0         # requests requeued for recompute (pool ran
+    #                              dry, or displaced by a variant reload)
+    variant_swaps: int = 0       # set_variant reloads (may preempt actives)
     completed: list = field(default_factory=list)
     step_times: list = field(default_factory=list)
 
@@ -101,10 +103,21 @@ class Engine:
         self.variants[name] = (model, params)
 
     def set_variant(self, name: str) -> None:
-        """Reloading a different model variant (costs a pause, paper §4.3)."""
+        """Reload a different model variant (costs a pause, paper §4.3).
+
+        In-flight requests lose their KV state (the new variant's cache is
+        a different shape) but are not dropped: they are preempted — blocks
+        released, requeued at the front — and recomputed under the new
+        variant, exactly like a pool-exhaustion preemption.  Setting the
+        already-active variant is a no-op."""
+        if name == self.knobs.variant:
+            return
         model, params = self.variants[name]
+        if self.active:
+            # reverse-sorted so the front of the queue ends up in rid order
+            self._preempt(sorted(self.active, reverse=True))
         self.knobs.variant = name
-        self.active.clear()
+        self.stats.variant_swaps += 1
         self._bind(model)
 
     @property

@@ -1,7 +1,7 @@
 """Training step factory: loss -> grads -> AdamW, pjit-ready."""
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

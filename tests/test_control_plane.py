@@ -1,0 +1,358 @@
+"""Control-plane API redesign: parity with the pre-refactor monolithic
+``run()``, protocol invariants through ``ControlPolicy``, scenario
+validation, custom-policy plug-in, and the engine-in-the-loop backend."""
+import numpy as np
+import pytest
+
+from repro.core.datacenter import DCConfig
+from repro.core.oversubscribe import max_safe_oversubscription
+from repro.core.scenario import (DemandSurge, FailureEvent, Scenario,
+                                 VMArrival, WeatherShift)
+from repro.core.simulator import (BASELINE, TAPAS, ClusterSim,
+                                  CompositeControlPlane, SimConfig,
+                                  build_control_policy)
+
+DC = DCConfig(n_rows=4, racks_per_row=5, servers_per_rack=4)
+
+# ---------------------------------------------------------------------------
+# parity: the step-wise simulator reproduces the pre-refactor run()
+# ---------------------------------------------------------------------------
+# Captured from the monolithic ClusterSim.run() at commit 0702485 (with
+# process-stable trace seeding), DC=4x5x4, horizon 18h @ 10min ticks,
+# seed 0, occupancy 0.97, demand_scale 1.0.  The baseline run exercises
+# the thermal-throttling path (195 events); the TAPAS run exercises
+# risk-aware routing + instance reconfiguration.
+GOLDEN = {
+    "baseline": {
+        "max_temp_c": 90.8908462524414,
+        "p99_temp_c": 90.85484657287597,
+        "peak_row_power_frac": 0.847109718589516,
+        "thermal_events": 195,
+        "power_events": 0,
+        "thermal_capped_frac": 0.030013852547329536,
+        "power_capped_frac": 0.0,
+        "unserved_frac": 0.007844065393003393,
+        "mean_quality": 1.0,
+        "iaas_perf_impact": 0.0,
+        "saas_perf_impact": 0.004380975508849042,
+    },
+    "tapas": {
+        "max_temp_c": 82.12345886230469,
+        "p99_temp_c": 82.11441604614258,
+        "peak_row_power_frac": 0.7113924893465909,
+        "thermal_events": 0,
+        "power_events": 0,
+        "thermal_capped_frac": 0.0,
+        "power_capped_frac": 0.0,
+        "unserved_frac": 0.03401312942542851,
+        "mean_quality": 1.0,
+        "iaas_perf_impact": 0.0,
+        "saas_perf_impact": 0.0,
+    },
+}
+# TAPAS under a UPS failure (legacy `failures=` channel), horizon 8h, seed 3.
+GOLDEN_UPS = {
+    "max_temp_c": 81.7948989868164,
+    "p99_temp_c": 81.6063998413086,
+    "peak_row_power_frac": 0.5979962296919389,
+    "thermal_events": 0,
+    "power_events": 0,
+    "thermal_capped_frac": 0.0,
+    "power_capped_frac": 0.0,
+    "unserved_frac": 8.914371916988178e-18,
+    "mean_quality": 1.0,
+    "iaas_perf_impact": 0.0,
+    "saas_perf_impact": 0.0,
+}
+
+PARITY_KW = dict(dc=DC, horizon_h=18.0, tick_min=10.0, seed=0,
+                 occupancy=0.97, demand_scale=1.0)
+
+
+def _assert_summary(got: dict, want: dict) -> None:
+    for key, ref in want.items():
+        assert float(got[key]) == pytest.approx(ref, rel=1e-9, abs=1e-12), key
+
+
+@pytest.mark.parametrize("name,policy", [("baseline", BASELINE),
+                                         ("tapas", TAPAS)])
+def test_parity_with_prerefactor_run(name, policy):
+    res = ClusterSim(SimConfig(policy=policy, **PARITY_KW)).run()
+    _assert_summary(res.summary(), GOLDEN[name])
+
+
+def test_parity_with_failure_scenario():
+    ev = FailureEvent(kind="ups", start_h=4.0, end_h=6.0)
+    res = ClusterSim(SimConfig(dc=DC, horizon_h=8.0, tick_min=10.0, seed=3,
+                               policy=TAPAS, occupancy=0.97,
+                               demand_scale=1.0, failures=(ev,))).run()
+    _assert_summary(res.summary(), GOLDEN_UPS)
+
+
+def test_stepwise_drive_equals_run():
+    """Externally driving step() tick-by-tick == run(), and reset() makes
+    a second run deterministic."""
+    kw = dict(dc=DC, horizon_h=6.0, tick_min=10.0, seed=2,
+              occupancy=0.95, demand_scale=0.98)
+    ref = ClusterSim(SimConfig(policy=TAPAS, **kw)).run()
+    sim = ClusterSim(SimConfig(policy=TAPAS, **kw))
+    states = []
+    while sim.tick < sim.ticks:
+        states.append(sim.step())
+    assert len(states) == sim.ticks
+    _assert_summary(sim.result().summary(), ref.summary())
+    # per-tick telemetry is populated on every state
+    for st in states:
+        assert st.risk is not None and st.risk.shape == (DC.n_servers,)
+        assert st.row_power_frac is not None
+    # rerun after reset reproduces the same result
+    sim.reset()
+    _assert_summary(sim.run().summary(), ref.summary())
+
+
+# ---------------------------------------------------------------------------
+# protocol invariants through ControlPolicy
+# ---------------------------------------------------------------------------
+
+class SpyPolicy(CompositeControlPlane):
+    """Wraps the TAPAS control plane and asserts protocol invariants on
+    every decision it makes."""
+
+    def __init__(self, inner: CompositeControlPlane):
+        super().__init__(inner.placement, inner.routing, inner.reconfig)
+        self.live: set = set()
+        self.placements = 0
+        self.routes = 0
+
+    def place(self, state, vm):
+        empty_before = state.kind.copy() == 0
+        srv = super().place(state, vm)
+        if srv is not None:
+            # no placement on an occupied server, ever
+            assert empty_before[srv], f"server {srv} double-booked"
+            assert srv not in self.live
+            self.live.add(srv)
+            self.placements += 1
+        return srv
+
+    def release(self, state, server):
+        self.live.discard(server)
+        super().release(state, server)
+
+    def route(self, state, endpoint, demand):
+        out = super().route(state, endpoint, demand)
+        # demand conservation: routed + unserved == demand
+        np.testing.assert_allclose(out.load.sum() + out.unserved, demand,
+                                   rtol=1e-6, atol=1e-6)
+        assert (out.load >= -1e-9).all()
+        # routed load never exceeds the per-server capacity the state
+        # telemetry implies (paused -> 0; else goodput-fraction x freq cap)
+        for i, srv in enumerate(out.servers):
+            inst = state.instances[int(srv)]
+            cap = (0.0 if inst.paused else
+                   (inst.entry.goodput / state.nominal.goodput)
+                   * state.freq_cap[srv])
+            assert out.load[i] <= cap + 1e-6
+        self.routes += 1
+        return out
+
+
+def test_protocol_invariants_under_tapas():
+    kw = dict(dc=DC, horizon_h=8.0, tick_min=10.0, seed=1,
+              occupancy=0.97, demand_scale=1.0)
+    spy = SpyPolicy(build_control_policy(TAPAS, tick_s=600.0, seed=1))
+    sim = ClusterSim(SimConfig(policy=TAPAS, control=spy, **kw))
+    res = sim.run()
+    assert spy.placements > 0
+    assert spy.routes > 0
+    assert np.isfinite(res.max_gpu_temp).all()
+
+
+def test_custom_policy_plugs_in():
+    """A user-defined ControlPolicy drives the sim through SimConfig."""
+
+    class ColdestFirst(CompositeControlPlane):
+        """Places every VM on the coldest empty server."""
+
+        def place(self, state, vm):
+            from repro.core.traces import predict_peak_util
+            empty = np.flatnonzero(state.kind == 0)
+            if empty.size == 0:
+                return None
+            t_peak = self.placement.allocator._peak_temp(state.alloc, 1.0)
+            srv = int(empty[np.argmin(t_peak[empty])])
+            state.alloc.place(srv, vm, predict_peak_util(vm, seed=state.seed))
+            return srv
+
+    inner = build_control_policy(TAPAS, tick_s=600.0, seed=0)
+    sim = ClusterSim(SimConfig(dc=DC, horizon_h=4.0, tick_min=10.0, seed=0,
+                               policy=TAPAS, control=ColdestFirst(
+                                   inner.placement, inner.routing,
+                                   inner.reconfig)))
+    res = sim.run()
+    assert (res.max_gpu_temp > 0).any()
+
+
+# ---------------------------------------------------------------------------
+# scenario validation + composition
+# ---------------------------------------------------------------------------
+
+def test_custom_policy_factory_resets_deterministically():
+    """A factory control= is rebuilt on reset(), so run() twice agrees."""
+    kw = dict(dc=DC, horizon_h=4.0, tick_min=10.0, seed=5, policy=TAPAS,
+              control=lambda: build_control_policy(TAPAS, tick_s=600.0,
+                                                   seed=5))
+    sim = ClusterSim(SimConfig(**kw))
+    r1 = sim.run().summary()
+    r2 = sim.run().summary()
+    _assert_summary(r2, r1)
+
+
+def test_failure_target_validated_against_topology():
+    ev = FailureEvent(kind="ahu", start_h=1.0, end_h=2.0,
+                      target=DC.n_rows)   # aisles = rows // 2 -> out of range
+    with pytest.raises(ValueError, match="aisle"):
+        ClusterSim(SimConfig(dc=DC, policy=TAPAS, failures=(ev,)))
+
+
+def test_failure_kind_validated_at_construction():
+    with pytest.raises(ValueError, match="upss"):
+        FailureEvent(kind="upss", start_h=1.0, end_h=2.0)
+    with pytest.raises(ValueError):
+        FailureEvent(kind="ups", start_h=2.0, end_h=2.0)  # empty window
+    with pytest.raises(ValueError, match="fleet-wide"):
+        FailureEvent(kind="ups", start_h=1.0, end_h=2.0, target=1)
+    with pytest.raises(ValueError):
+        DemandSurge(start_h=0.0, end_h=1.0, scale=0.0)
+    with pytest.raises(ValueError):
+        VMArrival(arrival_h=0.0, kind="sass", customer="ep0", lifetime_h=1.0)
+    with pytest.raises(TypeError):
+        Scenario(("not-an-event",))
+
+
+def test_scenario_accessors_and_composition():
+    s = Scenario((FailureEvent(kind="ahu", start_h=1.0, end_h=2.0, target=1),
+                  DemandSurge(start_h=0.0, end_h=4.0, scale=2.0,
+                              endpoint="ep1"),
+                  WeatherShift(start_h=0.0, end_h=1.0, delta_c=5.0)))
+    assert [f.kind for f in s.failures(1.5)] == ["ahu"]
+    assert s.failures(2.5) == []
+    assert s.demand_scale(1.0, "ep1") == pytest.approx(2.0)
+    assert s.demand_scale(1.0, "ep0") == pytest.approx(1.0)
+    assert s.weather_delta(0.5) == pytest.approx(5.0)
+    both = s + Scenario((FailureEvent(kind="ups", start_h=1.0, end_h=2.0),))
+    assert len(both.failures(1.5)) == 2
+
+
+def test_scenario_events_shape_the_run():
+    dc = DCConfig(n_rows=2, racks_per_row=3, servers_per_rack=2)
+    kw = dict(dc=dc, horizon_h=4.0, tick_min=10.0, seed=4, policy=BASELINE,
+              occupancy=0.9, demand_scale=0.9)
+    calm = ClusterSim(SimConfig(**kw)).run()
+    hot = ClusterSim(SimConfig(scenario=Scenario((
+        WeatherShift(start_h=0.0, end_h=4.0, delta_c=12.0),)), **kw)).run()
+    assert hot.max_gpu_temp.max() > calm.max_gpu_temp.max()
+    # scripted VM arrivals join the workload (new endpoint appears)
+    sim = ClusterSim(SimConfig(scenario=Scenario((
+        VMArrival(arrival_h=0.0, kind="saas", customer="ep-scripted",
+                  lifetime_h=10.0),)), **kw))
+    assert "ep-scripted" in sim.work.endpoints
+    sim.run()
+    assert "ep-scripted" in sim._ep_servers
+
+
+def test_max_safe_oversubscription_is_contiguous():
+    rows = [
+        {"policy": "tapas", "oversub": 0.0,
+         "thermal_capped_pct": 0.0, "power_capped_pct": 0.0},
+        {"policy": "tapas", "oversub": 0.2,
+         "thermal_capped_pct": 5.0, "power_capped_pct": 0.0},  # fails budget
+        {"policy": "tapas", "oversub": 0.4,
+         "thermal_capped_pct": 0.0, "power_capped_pct": 0.0},
+    ]
+    # 0.4 is individually safe but unreachable past the failing 0.2 point
+    assert max_safe_oversubscription(rows, "tapas") == 0.0
+    rows[1]["thermal_capped_pct"] = 0.0
+    assert max_safe_oversubscription(rows, "tapas") == 0.4
+
+
+# ---------------------------------------------------------------------------
+# engine: set_variant preserves in-flight requests; backend knob mapping
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_engine():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import build_model, local_plan
+    from repro.serving import Engine, EngineKnobs
+
+    cfg = get_config("llama2-7b").smoke_config()
+    small = cfg.replace(num_layers=1, d_ff=64, name="llama2-smaller")
+    plan = local_plan(param_dtype=jnp.bfloat16)
+    model = build_model(cfg, plan)
+    model_small = build_model(small, plan)
+    eng = Engine(model, model.init(jax.random.PRNGKey(0)), max_seq=64,
+                 n_slots=2, knobs=EngineKnobs(max_batch=2))
+    eng.add_variant("small", model_small,
+                    model_small.init(jax.random.PRNGKey(1)))
+    return eng
+
+
+def test_set_variant_requeues_in_flight(smoke_engine):
+    from repro.serving import Request
+    eng = smoke_engine
+    eng.set_variant("full")        # reset from any earlier test
+    eng.stats.__init__()
+    for i in range(3):
+        eng.submit(Request(prompt=[1 + i, 2, 3], max_new_tokens=6))
+    eng.step(now=0.0)              # some requests now in flight
+    assert eng.active, "test needs in-flight requests"
+    n_active = len(eng.active)
+    eng.set_variant("small")
+    assert not eng.active
+    # in-flight requests were requeued, not dropped
+    assert len(eng.queue) >= n_active
+    assert eng.stats.variant_swaps == 1
+    assert eng.stats.preemptions == n_active
+    stats = eng.run()
+    done = stats.completed
+    assert len(done) == 3          # every submitted request completed
+    for r in done:
+        assert len(r.output) == 6  # full budget despite the swap
+
+
+def test_engine_backend_maps_config_to_knobs(smoke_engine):
+    from repro.core.profiles import ConfigPoint
+    from repro.serving import EngineBackend
+    eng = smoke_engine
+    eng.set_variant("full")
+    backend = EngineBackend(eng, variant_for_size={"70b": "full",
+                                                   "7b": "small"},
+                            steps_per_tick=2, max_new_tokens=2)
+    backend.apply_config(ConfigPoint(freq=0.7, tp=8, batch=16, size="70b",
+                                     quant="bf16"))
+    assert eng.knobs.freq_scale == pytest.approx(0.7)
+    assert eng.knobs.max_batch == 1          # 16 -> half of 2 lanes
+    assert eng.knobs.variant == "full"
+    backend.apply_config(ConfigPoint(freq=0.6, tp=8, batch=64, size="7b",
+                                     quant="bf16"))
+    assert eng.knobs.variant == "small"      # size knob swapped the model
+    assert eng.knobs.max_batch == 2
+    produced = backend.pump(now=0.0, load=1.0)
+    assert produced > 0
+    assert backend.measured_goodput() >= 0.0
+    assert len(backend.applied) == 2
+    # a reloading decision drains the engine: no admission while paused
+    backend.apply_config(ConfigPoint(freq=1.0, tp=8, batch=64, size="7b",
+                                     quant="bf16"), paused=True)
+    assert eng.knobs.paused
+    eng.run()                                  # drain in-flight work
+    queued = len(eng.queue)
+    assert backend.pump(now=1.0, load=2.0) == 0
+    assert len(eng.queue) > queued             # demand queued, not served
+    backend.apply_config(ConfigPoint(freq=1.0, tp=8, batch=64, size="7b",
+                                     quant="bf16"), paused=False)
+    assert backend.pump(now=2.0, load=0.0) > 0  # queue drains again

@@ -1,6 +1,5 @@
 """Per-kernel allclose vs the pure-jnp oracle, swept over shapes/dtypes.
 All kernels run in interpret mode (exact kernel-body execution on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

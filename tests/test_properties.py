@@ -11,7 +11,7 @@ from repro.core.power import PowerModel
 from repro.core.router import TapasRouter
 from repro.core.datacenter import Datacenter, DCConfig
 from repro.core.thermal import ThermalModel
-from repro.kernels.int8_matmul import quantize_cols, quantize_rows
+from repro.kernels.int8_matmul import quantize_rows
 
 _dc = Datacenter(DCConfig(n_rows=2, racks_per_row=3, servers_per_rack=2))
 _th = ThermalModel.calibrate(_dc)

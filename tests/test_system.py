@@ -1,7 +1,5 @@
 """End-to-end behaviour: training convergence, serving engine, checkpoint
 restart (fault tolerance), elastic re-meshing, launch drivers."""
-import pathlib
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -7,11 +7,11 @@ from repro.core import profiles as P
 from repro.core.allocator import AllocatorState, BaselineAllocator, TapasAllocator
 from repro.core.configurator import InstanceConfigurator
 from repro.core.datacenter import Datacenter, DCConfig, scale_datacenter
-from repro.core.power import PowerModel, capping_factors, row_power
+from repro.core.power import PowerModel, capping_factors
 from repro.core.router import BaselineRouter, TapasRouter
 from repro.core.simulator import (BASELINE, TAPAS, ClusterSim, FailureEvent,
                                   SimConfig)
-from repro.core.thermal import ThermalModel, outside_temperature
+from repro.core.thermal import ThermalModel
 from repro.core.traces import VMSpec, generate_workload, iaas_util
 
 
