@@ -246,7 +246,7 @@ def measure_from_engine(*, arch: str = "llama2-7b",
                 eng.stats = EngineStats()
                 submit_load(np.random.default_rng(seed))
                 stats = eng.run()
-                wall = max(sum(stats.step_times), 1e-9)
+                wall = max(stats.step_time_total, 1e-9)
                 rows.append({
                     "variant": vname, "size": size, "batch": batch,
                     "freq": freq, "tok_per_s": stats.decode_tokens / wall,

@@ -16,6 +16,8 @@ from repro.kernels.int8_matmul import (int8_matmul as _int8_mm,
                                        quantize_cols, quantize_rows)
 from repro.kernels.paged_decode_attention import \
     paged_decode_attention as _paged_decode
+from repro.kernels.paged_decode_attention import \
+    paged_prefill_attention as _paged_prefill
 from repro.kernels.rwkv6_wkv import rwkv6_wkv as _wkv
 
 
@@ -49,6 +51,15 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, positions, *,
                          interpret=interpret)
 
 
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill_attention(q, k_pool, v_pool, block_tables, starts, *,
+                            interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _paged_prefill(q, k_pool, v_pool, block_tables, starts,
+                          interpret=interpret)
+
+
 @partial(jax.jit, static_argnames=("block_t", "interpret"))
 def rwkv6_wkv(r, k, v, w, u, s0, *, block_t=64, interpret=None):
     if interpret is None:
@@ -74,5 +85,5 @@ def int8_matmul(x_q, w_q, sx, sw, *, interpret=None):
 
 
 __all__ = ["flash_attention", "decode_attention", "paged_decode_attention",
-           "rwkv6_wkv", "int8_matmul", "int8_matmul_quantized",
-           "quantize_rows", "quantize_cols"]
+           "paged_prefill_attention", "rwkv6_wkv", "int8_matmul",
+           "int8_matmul_quantized", "quantize_rows", "quantize_cols"]

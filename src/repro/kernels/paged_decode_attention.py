@@ -77,6 +77,112 @@ def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = (acc_sc[...] / denom).astype(o_ref.dtype)
 
 
+def _paged_prefill_kernel(bt_ref, st_ref, q_ref, k_ref, v_ref, o_ref,
+                          m_sc, l_sc, acc_sc, *, scale: float,
+                          block_size: int, groups: int, chunk: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)          # logical block index within the sequence
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    start = st_ref[b]
+    k_lo = j * block_size
+
+    # the chunk's own KV is already in the pool; blocks past the chunk's
+    # last query position contribute nothing and are skipped entirely
+    @pl.when(k_lo <= start + chunk - 1)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)      # (C, H, D), H = K*G
+        k = k_ref[...].astype(jnp.float32)    # (bs, K, D) — physical block
+        v = v_ref[...].astype(jnp.float32)
+        K = k.shape[1]
+        qg = q.reshape(chunk, K, groups, -1).transpose(1, 0, 2, 3) \
+              .reshape(K, chunk * groups, -1)
+        # scores (K, C*G, bs)
+        s = jax.lax.dot_general(qg, k, (((2,), (2,)), ((0,), (1,))),
+                                preferred_element_type=jnp.float32) * scale
+        cidx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) // groups
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        s = jnp.where(kpos <= start + cidx, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=2))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=2)
+        # (K, C*G, bs) x (bs, K, D) -> (K, C*G, D)
+        o = jax.lax.dot_general(p, v, (((2,), (0,)), ((0,), (1,))),
+                                preferred_element_type=jnp.float32)
+        acc_sc[...] = acc_sc[...] * corr[..., None] + o
+        m_sc[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        denom = jnp.maximum(l_sc[...], 1e-30)[..., None]
+        o = acc_sc[...] / denom               # (K, C*G, D)
+        K = o.shape[0]
+        o = o.reshape(K, chunk, groups, -1).transpose(1, 0, 2, 3) \
+             .reshape(chunk, K * groups, -1)
+        o_ref[0] = o.astype(o_ref.dtype)
+
+
+def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, block_tables: jax.Array,
+                            starts: jax.Array, *,
+                            scale: float | None = None,
+                            interpret: bool = False) -> jax.Array:
+    """Chunked-prefill attention over a paged KV pool.
+
+    q: (B, C, H, D) — C chunk queries per sequence, query c sitting at
+    absolute position ``starts[b] + c``; k_pool/v_pool: (n_blocks, bs, K,
+    D) with the chunk's own KV already written; block_tables: (B, T)
+    int32 physical ids (pad unused slots with 0); starts: (B,) ->
+    o (B, C, H, D).  Same online-softmax walk as the decode kernel with a
+    (C*G)-row score tile per KV head and a per-row causal mask
+    ``kpos <= starts + c``; pool blocks past the chunk's last query are
+    never DMA'd.
+    """
+    B, C, H, D = q.shape
+    bs, K = k_pool.shape[1], k_pool.shape[2]
+    T = block_tables.shape[1]
+    assert H % K == 0
+    groups = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    kern = functools.partial(_paged_prefill_kernel, scale=scale,
+                             block_size=bs, groups=groups, chunk=C)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,    # block_tables, starts land in SMEM
+        grid=(B, T),
+        in_specs=[
+            pl.BlockSpec((1, C, H, D), lambda b, j, bt, st: (b, 0, 0, 0)),
+            pl.BlockSpec((None, bs, K, D),
+                         lambda b, j, bt, st: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((None, bs, K, D),
+                         lambda b, j, bt, st: (bt[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, H, D),
+                               lambda b, j, bt, st: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((K, C * groups), jnp.float32),
+            pltpu.VMEM((K, C * groups), jnp.float32),
+            pltpu.VMEM((K, C * groups, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        compiler_params=tpu_compiler_params(("parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), starts.astype(jnp.int32),
+      q, k_pool, v_pool)
+
+
 def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                            block_tables: jax.Array, positions: jax.Array, *,
                            scale: float | None = None,

@@ -61,6 +61,30 @@ def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, positions, *,
     return decode_attention_ref(q, k, v, positions, scale=scale)
 
 
+def paged_prefill_attention_ref(q, k_pool, v_pool, block_tables, starts, *,
+                                scale=None):
+    """q: (B, C, H, D) chunk queries at positions starts[b] + c;
+    k_pool/v_pool: (n_blocks, bs, K, D); block_tables: (B, T);
+    starts: (B,)."""
+    B, C, H, D = q.shape
+    bs, K = k_pool.shape[1], k_pool.shape[2]
+    T = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    k = k_pool[block_tables].reshape(B, T * bs, K, D)
+    v = v_pool[block_tables].reshape(B, T * bs, K, D)
+    reps = H // K
+    k = jnp.repeat(k, reps, axis=2)  # (B, S, H, D)
+    v = jnp.repeat(v, reps, axis=2)
+    s = jnp.einsum("bchd,bshd->bhcs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = starts[:, None] + jnp.arange(C)[None, :]          # (B, C)
+    mask = jnp.arange(T * bs)[None, None, :] <= qpos[:, :, None]
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhcs,bshd->bchd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
 def rwkv6_wkv_ref(r, k, v, w, u, s0):
     """r/k/v/w: (B, T, H, D); u: (H, D); s0: (B, H, D, D)."""
     def step(s, inp):

@@ -589,6 +589,85 @@ def paged_attention(q, k_pool, v_pool, block_tables, positions, *,
     return o.astype(q.dtype)
 
 
+def paged_prefill_attention(q, k_pool, v_pool, block_tables, starts, *,
+                            scale: float, kv_idx: jax.Array) -> jax.Array:
+    """Chunk-prefill attention over a paged KV pool (XLA gather path).
+
+    q: (B, C, H, hd) — a chunk of C query tokens per sequence whose first
+    token sits at absolute position ``starts[b]``; k_pool/v_pool:
+    (n_blocks, bs, K, hd); block_tables: (B, T).  The chunk's own KV must
+    already be written into the pool (see ``gqa_prefill_paged``), so one
+    gather serves both the cached context and the within-chunk causal
+    part: position kpos is visible to chunk token c iff
+    kpos <= starts + c.  On TPU the Pallas counterpart
+    (``kernels/paged_decode_attention.paged_prefill_attention``) resolves
+    the gather in its BlockSpec index map instead.
+    """
+    B, C, H = q.shape[:3]
+    bs, K = k_pool.shape[1], k_pool.shape[2]
+    T = block_tables.shape[1]
+    k = k_pool[block_tables].reshape(B, T * bs, K, -1)
+    v = v_pool[block_tables].reshape(B, T * bs, K, -1)
+    ke = _expand_kv(k, kv_idx, H)
+    ve = _expand_kv(v, kv_idx, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, ke,
+                   preferred_element_type=jnp.float32) * scale
+    qpos = starts[:, None] + jnp.arange(C)[None, :]            # (B, C)
+    mask = jnp.arange(T * bs)[None, None, :] <= qpos[:, :, None]
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", prob.astype(ve.dtype), ve,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def gqa_prefill_paged(p: Params, x: jax.Array, cache: Params,
+                      starts: jax.Array, lengths: jax.Array,
+                      block_tables: jax.Array, cfg: ArchConfig,
+                      plan: ShardPlan):
+    """Chunked-prefill step over the paged pool: project a chunk of C
+    tokens, scatter its KV into the owned blocks, then attend through the
+    block table (cached context + within-chunk causal in one gather).
+
+    x: (B, C, d); starts: (B,) absolute position of x[:, 0]; lengths: (B,)
+    valid tokens per row (ragged tails).  Invalid positions are routed to
+    the reserved parking block 0, whose contents are never read unmasked.
+    """
+    dt = plan.compute_dtype
+    h_pad = plan.h_pad(cfg)
+    B, C = x.shape[:2]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"].astype(dt))
+    k = jnp.einsum("bsd,dgk->bsgk", x, p["w_k"].astype(dt))
+    v = jnp.einsum("bsd,dgk->bsgk", x, p["w_v"].astype(dt))
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"])
+        k = L.rms_norm(k, p["k_norm"])
+    positions = starts[:, None] + jnp.arange(C)[None, :]
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    if plan.kv_padded(cfg):
+        copies = plan.k_pad(cfg) // cfg.n_kv_heads
+        k, v = k[:, :, ::copies], v[:, :, ::copies]
+    bs = cache["k"].shape[1]
+    K = cache["k"].shape[2]
+    valid = jnp.arange(C)[None, :] < lengths[:, None]
+    safe_pos = jnp.where(valid, positions, 0)
+    blk = jnp.take_along_axis(block_tables, safe_pos // bs, axis=1)
+    blk = jnp.where(valid, blk, 0)
+    off = jnp.where(valid, safe_pos % bs, 0)
+    k_c = cache["k"].at[blk.reshape(-1), off.reshape(-1)].set(
+        k.reshape(B * C, K, -1).astype(cache["k"].dtype))
+    v_c = cache["v"].at[blk.reshape(-1), off.reshape(-1)].set(
+        v.reshape(B * C, K, -1).astype(cache["v"].dtype))
+    idx = kv_index(cfg, h_pad)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    o = paged_prefill_attention(q, k_c, v_c, block_tables, starts,
+                                scale=scale, kv_idx=idx)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["w_o"].astype(dt))
+    return plan.constrain(out, ("batch", "seq", "embed_act"), cfg), \
+        {"k": k_c, "v": v_c}
+
+
 def gqa_decode_paged(p: Params, x: jax.Array, cache: Params,
                      positions: jax.Array, block_tables: jax.Array,
                      cfg: ArchConfig, plan: ShardPlan):

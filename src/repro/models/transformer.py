@@ -204,6 +204,35 @@ def block_decode(x, lp: Params, lc: Params, positions, cfg: ArchConfig,
     return x, new_cache
 
 
+def block_prefill_paged(x, lp: Params, lc: Params, starts, lengths,
+                        block_tables, cfg: ArchConfig, plan: ShardPlan):
+    """Chunked-prefill variant of ``block_forward`` over the paged pool.
+
+    x: (B, C, d) — one chunk of C prompt tokens per row starting at
+    absolute position ``starts[b]``; lc holds this layer's slice of the
+    global block pool.  The attention scatter/gather goes through the
+    per-sequence block table, so the chunk sees all previously written
+    context (earlier chunks, shared prefix blocks) plus itself causally.
+    """
+    h = _norm(x, lp["norm1"], cfg)
+    attn_out, attn_cache = A.gqa_prefill_paged(lp["attn"], h, lc["attn"],
+                                               starts, lengths, block_tables,
+                                               cfg, plan)
+    x = x + attn_out
+    h = _norm(x, lp["norm2"], cfg)
+    if cfg.n_experts:
+        y, _ = M.moe_ffn(lp["moe"], h, cfg, plan)
+    elif cfg.mlp_kind == "gelu2":
+        y = L.gelu_mlp(h, {k: v.astype(plan.compute_dtype) for k, v in lp["mlp"].items()})
+        y = plan.constrain(y, ("batch", "seq", "embed_act"), cfg)
+    else:
+        y = L.glu_mlp(h, {k: v.astype(plan.compute_dtype) for k, v in lp["mlp"].items()},
+                      activation=cfg.activation)
+        y = plan.constrain(y, ("batch", "seq", "embed_act"), cfg)
+    x = x + y
+    return x, {"attn": attn_cache}
+
+
 def block_decode_paged(x, lp: Params, lc: Params, positions, block_tables,
                        cfg: ArchConfig, plan: ShardPlan):
     """Paged-pool variant of ``block_decode`` (plain-GQA families only).
@@ -501,6 +530,90 @@ class Model:
         x = _norm(x, params["final_norm"], cfg)
         logits = self._head(params, x)
         return logits, new_cache
+
+    def decode_multi_paged(self, params, cache, tokens, positions,
+                           block_tables, active, budgets, eos_ids,
+                           num_steps: int, max_len: int):
+        """Fused multi-step greedy decode over the paged pool.
+
+        Runs ``num_steps`` decode iterations inside one jitted
+        ``lax.scan`` horizon — embed, trunk, greedy sampling (argmax), KV
+        append, position advance and finished-flag computation all stay on
+        device; the host only reads ``(out_tokens, emitted)`` when the
+        horizon drains (one sync per N steps instead of per step).
+
+        tokens/positions: (B,) per-lane state at entry; active: (B,) bool
+        decode mask (parked / still-prefilling lanes False); budgets: (B,)
+        tokens each lane may still produce; eos_ids: (B,) int32 (-1 = no
+        eos).  Lanes that finish mid-horizon are steered to the parking
+        block (position 0, table row 0) so they never touch live blocks.
+        Blocks for every position a lane can reach within the horizon must
+        be allocated before entry (``PagedCachePool.ensure_append_blocks``
+        with the same horizon).
+
+        Returns ``(out_tokens (N, B), emitted (N, B) bool — token [i, b]
+        valid iff emitted, last_logits (B, V_pad), (tokens, positions,
+        active, budgets) final state, cache)``.
+        """
+        cfg, plan = self.cfg, self.plan
+        v_pad = params["embed"].shape[0] if "embed" in params else \
+            self._unembed_w(params).shape[1]
+        logits0 = jnp.zeros((tokens.shape[0], v_pad), plan.compute_dtype)
+
+        def one_step(carry, _):
+            cache, tokens, positions, active, budgets, _ = carry
+            pos_eff = jnp.where(active, positions, 0)
+            bt_eff = jnp.where(active[:, None], block_tables, 0)
+            logits, cache = self.decode_step_paged(
+                params, cache, tokens, pos_eff, bt_eff)
+            nxt = jnp.argmax(logits[:, : cfg.vocab_size],
+                             axis=-1).astype(jnp.int32)
+            emitted = active
+            budgets = budgets - emitted.astype(jnp.int32)
+            done = emitted & ((budgets <= 0) | (nxt == eos_ids)
+                              | (positions + 1 >= max_len))
+            tokens = jnp.where(emitted, nxt, tokens)
+            positions = positions + emitted.astype(jnp.int32)
+            active = active & ~done
+            carry = (cache, tokens, positions, active, budgets,
+                     logits.astype(logits0.dtype))
+            return carry, (nxt, emitted)
+
+        carry0 = (cache, tokens, positions, active, budgets, logits0)
+        (cache, tokens, positions, active, budgets, last_logits), \
+            (out_tokens, emitted) = jax.lax.scan(
+                one_step, carry0, None, length=num_steps)
+        return (out_tokens, emitted, last_logits,
+                (tokens, positions, active, budgets), cache)
+
+    def prefill_chunk_paged(self, params, cache, tokens, starts, lengths,
+                            block_tables):
+        """One chunked-prefill step over the paged pool.
+
+        tokens: (B, C) — the next C context tokens per prefilling row, row
+        b valid for its first lengths[b] tokens; starts: (B,) absolute
+        position of tokens[:, 0] (tokens before ``starts`` — earlier
+        chunks or prefix-shared blocks — must already sit in the pool).
+        Returns (logits at each row's last valid chunk token (B, V_pad),
+        cache).  Rows admitted mid-way through a longer prompt simply call
+        this again with ``starts`` advanced; decode TBT is never blocked
+        for longer than one chunk.
+        """
+        cfg, plan = self.cfg, self.plan
+        x = self._embed_inputs(params, tokens)
+
+        def body(x, inp):
+            lp, lc = inp
+            x, new_lc = block_prefill_paged(x, lp, lc, starts, lengths,
+                                            block_tables, cfg, plan)
+            return x, new_lc
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        x = _norm(x, params["final_norm"], cfg)
+        last = jnp.take_along_axis(
+            x, jnp.maximum(lengths - 1, 0)[:, None, None].astype(jnp.int32),
+            axis=1)[:, 0]
+        return self._head(params, last), new_cache
 
     # ----- grads -----
     def canonicalize_grads(self, grads: Params) -> Params:

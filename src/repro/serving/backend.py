@@ -97,13 +97,13 @@ class EngineBackend:
                 max_new_tokens=self.max_new_tokens,
                 customer=f"bk{self._next_id % 4}", arrival_s=now))
             self._next_id += 1
-        steps_before = len(self.engine.stats.step_times)
+        wall_before = self.engine.stats.step_time_total
         produced = 0
         for _ in range(self.steps_per_tick):
             if self.engine.knobs.paused and not self.engine.active:
                 break   # drained during a reload pause
             produced += self.engine.step(now=now)
-        wall = sum(self.engine.stats.step_times[steps_before:])
+        wall = self.engine.stats.step_time_total - wall_before
         # no steps ran (paused-and-drained, or idle) => the instance is
         # serving nothing right now; report that, not the last busy rate
         self._last_rate = produced / wall if wall > 0.0 else 0.0

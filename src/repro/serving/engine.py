@@ -17,10 +17,29 @@ Serving modes:
 * ``slots`` — the legacy contiguous-slot pool, kept for cache families the
   block pool cannot hold (MLA latent, SWA ring, recurrent state) and as
   the ground truth the paged path is tested against.
+
+The paged decode hot path is device-resident end to end:
+
+* **Horizon decode** (``horizon=N``) — greedy sampling, KV append,
+  position advance and finished-flag computation are fused into one
+  jitted ``lax.scan`` loop (``Model.decode_multi_paged``); the engine
+  runs up to N decode steps per host sync and only reads the drained
+  ``(tokens, emitted)`` horizon back.  Block-table / position /
+  last-token buffers persist on device between launches
+  (``PagedCachePool`` mirrors) instead of being re-uploaded every step.
+* **Chunked prefill** (``prefill_chunk=C``) — long prompts are split into
+  C-token chunks processed one per scheduler step and interleaved with
+  decode, so a long prefill never blocks decode TBT for more than one
+  chunk (Sarathi-style).
+* **Prefix sharing** (``prefix_share=True``) — admission looks the
+  prompt's full blocks up in the pool's content-hash index and reuses
+  refcounted blocks written by earlier requests (shared system prompts
+  are neither recomputed nor double-stored).
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -31,6 +50,8 @@ import numpy as np
 from repro.models.transformer import Model
 from repro.serving.kvcache import CachePool, PagedCachePool
 from repro.serving.request import Request
+
+STEP_WINDOW = 512       # recent step times retained for inspection
 
 
 @dataclass
@@ -50,15 +71,51 @@ class EngineStats:
     preemptions: int = 0         # requests requeued for recompute (pool ran
     #                              dry, or displaced by a variant reload)
     variant_swaps: int = 0       # set_variant reloads (may preempt actives)
+    rejected: int = 0            # contexts that can never fit max_seq
+    host_syncs: int = 0          # device->host readbacks on the serving path
+    decode_syncs: int = 0        # the subset issued by decode launches
+    n_steps: int = 0             # recorded (working) scheduler steps
+    step_time_total: float = 0.0  # running sum of freq-scaled step times
     completed: list = field(default_factory=list)
-    step_times: list = field(default_factory=list)
+    # recent window only — long-lived engines must not grow without bound
+    step_times: deque = field(
+        default_factory=lambda: deque(maxlen=STEP_WINDOW))
+    _good_acc: dict = field(default_factory=dict, repr=False)
+
+    def record_step(self, dt: float) -> None:
+        self.n_steps += 1
+        self.step_time_total += dt
+        self.step_times.append(dt)
+
+    def goodput(self, *, ttft_slo: float, tbt_slo: float) -> float:
+        """Tokens/s over completed requests meeting both SLOs.
+
+        Incremental: each completed request is folded into the per-SLO
+        accumulator exactly once, so repeated calls on a long-lived engine
+        do not rescan the whole history.
+        """
+        key = (ttft_slo, tbt_slo)
+        idx, good, t_max = self._good_acc.get(key, (0, 0, 1e-9))
+        for r in self.completed[idx:]:
+            t_max = max(t_max, r.finish_s or 0.0)
+            if (r.ttft() or 0) <= ttft_slo and (r.tbt() or 0) <= tbt_slo:
+                good += len(r.output)
+        self._good_acc[key] = (len(self.completed), good, t_max)
+        return good / t_max
 
 
-def _bucket(n: int, lo: int = 16) -> int:
-    """Power-of-two prompt-length bucket (bounds distinct prefill shapes)."""
+def _bucket(n: int, lo: int = 16, hi: int | None = None) -> int:
+    """Power-of-two prompt-length bucket (bounds distinct prefill shapes).
+
+    ``hi`` clamps the bucket to the cache capacity — a context one past a
+    power of two must not round up to a shape that can never be inserted.
+    Callers must reject contexts longer than ``hi`` beforehand.
+    """
     b = lo
     while b < n:
         b *= 2
+    if hi is not None:
+        b = min(b, hi)
     return b
 
 
@@ -66,7 +123,9 @@ class Engine:
     def __init__(self, model: Model, params: Any, *, max_seq: int = 512,
                  n_slots: int = 8, knobs: EngineKnobs | None = None,
                  paged: bool | None = None, block_size: int = 16,
-                 n_blocks: int | None = None):
+                 n_blocks: int | None = None, horizon: int = 1,
+                 prefill_chunk: int | None = None,
+                 prefix_share: bool = False):
         self.model = model
         self.variants: dict[str, tuple[Model, Any]] = {"full": (model, params)}
         self.knobs = knobs or EngineKnobs(max_batch=n_slots)
@@ -75,8 +134,23 @@ class Engine:
         self.block_size = block_size
         self.n_blocks = n_blocks
         self.paged = model.supports_paged if paged is None else paged
-        self.queue: list[Request] = []
+        if horizon < 1:
+            raise ValueError(f"horizon must be >= 1, got {horizon}")
+        self.horizon = horizon
+        # prefix sharing rides on the chunked (in-pool) prefill path: a
+        # shared head must be skipped, so the suffix is prefilled against
+        # the pool; default to one whole-prompt-sized chunk when unset
+        if prefix_share and prefill_chunk is None:
+            prefill_chunk = max_seq
+        self.prefill_chunk = prefill_chunk
+        self.prefix_share = prefix_share
+        if (prefill_chunk or prefix_share) and not self.paged:
+            raise ValueError("chunked prefill / prefix sharing require the "
+                             "paged serving mode")
+        self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}
+        self.prefilling: dict[int, Request] = {}
+        self._prefill_pos: dict[int, int] = {}
         self.stats = EngineStats()
         self._bind(model)
 
@@ -91,8 +165,12 @@ class Engine:
                 model, self.n_slots, self.max_seq,
                 block_size=self.block_size, n_blocks=self.n_blocks)
             self._prefill_jit = jax.jit(model.prefill_ragged)
-            self._decode_jit = jax.jit(model.decode_step_paged,
-                                       donate_argnums=(1,))
+            self._decode_multi_jit = jax.jit(
+                model.decode_multi_paged,
+                static_argnames=("num_steps", "max_len"),
+                donate_argnums=(1,))
+            self._prefill_chunk_jit = jax.jit(model.prefill_chunk_paged,
+                                              donate_argnums=(1,))
         else:
             self.pool = CachePool(model, self.n_slots, self.max_seq)
             self._prefill_jit = jax.jit(model.prefill)
@@ -113,9 +191,10 @@ class Engine:
         if name == self.knobs.variant:
             return
         model, params = self.variants[name]
-        if self.active:
+        in_flight = set(self.active) | set(self.prefilling)
+        if in_flight:
             # reverse-sorted so the front of the queue ends up in rid order
-            self._preempt(sorted(self.active, reverse=True))
+            self._preempt(sorted(in_flight, reverse=True))
         self.knobs.variant = name
         self.stats.variant_swaps += 1
         self._bind(model)
@@ -134,6 +213,13 @@ class Engine:
         preemption (recompute-style resume)."""
         return list(req.prompt) + list(req.output)
 
+    def _reject(self, req: Request, now: float) -> None:
+        """A context that can never fit the cache (even after recompute
+        growth) is finished empty instead of looping through admission."""
+        req.finish_s = now
+        self.stats.rejected += 1
+        self.stats.completed.append(req)
+
     def _activate(self, req: Request, tok: int, now: float) -> None:
         """Append the prefill token and either activate the request or, if
         it already hit its budget/eos (e.g. resumed right at the limit),
@@ -148,20 +234,29 @@ class Engine:
             self.pool.release(req.req_id)
             return
         self.active[req.req_id] = req
+        if self.paged:
+            self.pool.set_last_token(self.pool.lane_of[req.req_id], tok)
 
     def _admit(self, now: float) -> None:
         if self.paged:
-            self._admit_paged(now)
+            if self.prefill_chunk:
+                self._admit_chunked(now)
+            else:
+                self._admit_paged(now)
             return
         while (self.queue and self.pool.has_free()
                and len(self.active) < self.knobs.max_batch
                and not self.knobs.paused):
-            req = self.queue.pop(0)
+            if len(self._context(self.queue[0])) > self.max_seq - 1:
+                self._reject(self.queue.popleft(), now)
+                continue
+            req = self.queue.popleft()
             prompt = jnp.asarray([self._context(req)], jnp.int32)
             logits, cache = self._prefill_jit(self.params, prompt)
             self.stats.prefill_tokens += prompt.shape[1]
             self.stats.prefill_batches += 1
             tok = int(jnp.argmax(logits[0, : self.model.cfg.vocab_size]))
+            self.stats.host_syncs += 1
             self.pool.insert(req.req_id, cache, prompt.shape[1])
             self._activate(req, tok, now)
 
@@ -177,19 +272,24 @@ class Engine:
                and len(self.active) + len(batch) < self.knobs.max_batch
                and lanes_left > 0):
             ctx_len = len(self._context(self.queue[0]))
+            if ctx_len > self.max_seq - 1:
+                self._reject(self.queue.popleft(), now)
+                continue
             # reserve the first decode append too (an extra block exactly
             # when the context ends on a block boundary)
             need = self.pool.blocks_for(ctx_len + 1)
             if blocks_left < need:
                 break
-            batch.append(self.queue.pop(0))
+            batch.append(self.queue.popleft())
             lanes_left -= 1
             blocks_left -= need
         if not batch:
             return
         groups: dict[int, list[Request]] = {}
         for req in batch:
-            groups.setdefault(_bucket(len(self._context(req))), []).append(req)
+            groups.setdefault(
+                _bucket(len(self._context(req)), hi=self.max_seq),
+                []).append(req)
         for s_bucket, reqs in sorted(groups.items()):
             rows = len(reqs)
             b_pad = _bucket(rows, lo=1)   # batch bucket bounds retraces too
@@ -201,58 +301,176 @@ class Engine:
                 lengths[i] = len(ctx)
             logits, cache = self._prefill_jit(
                 self.params, jnp.asarray(tokens), jnp.asarray(lengths))
-            nxt = jnp.argmax(logits[:, : self.model.cfg.vocab_size], axis=-1)
+            nxt = np.asarray(
+                jnp.argmax(logits[:, : self.model.cfg.vocab_size], axis=-1))
             self.stats.prefill_batches += 1
+            self.stats.host_syncs += 1
             for i, req in enumerate(reqs):
                 self.pool.insert(req.req_id, cache, i, int(lengths[i]))
                 self.stats.prefill_tokens += int(lengths[i])
                 self._activate(req, int(nxt[i]), now)
 
+    def _admit_chunked(self, now: float) -> None:
+        """Chunked-prefill admission: claim a lane plus every block the
+        context needs (reusing prefix-shared blocks), then let
+        ``_prefill_tick`` stream the prompt into the pool one chunk per
+        scheduler step, interleaved with decode."""
+        while (self.queue and not self.knobs.paused
+               and len(self.active) + len(self.prefilling)
+               < self.knobs.max_batch):
+            ctx = self._context(self.queue[0])
+            if len(ctx) > self.max_seq - 1:
+                self._reject(self.queue.popleft(), now)
+                continue
+            shared = self.pool.shared_prefix(ctx) if self.prefix_share \
+                else []
+            lane = self.pool.admit_prefill(self.queue[0].req_id, len(ctx),
+                                           shared)
+            if lane is None:
+                break
+            req = self.queue.popleft()
+            self.prefilling[req.req_id] = req
+            self._prefill_pos[req.req_id] = \
+                len(shared) * self.pool.block_size
+        return
+
+    def _prefill_tick(self, now: float) -> int:
+        """Advance every in-progress prefill by one chunk (a single jitted
+        launch over all prefilling rows, padded to shared buckets)."""
+        if not self.prefilling:
+            return 0
+        reqs = sorted(self.prefilling.values(), key=lambda r: r.req_id)
+        ctxs = [self._context(r) for r in reqs]
+        takes = [min(self.prefill_chunk,
+                     len(ctx) - self._prefill_pos[r.req_id])
+                 for r, ctx in zip(reqs, ctxs)]
+        c_pad = _bucket(max(takes), lo=min(16, self.prefill_chunk))
+        b_pad = _bucket(len(reqs), lo=1)
+        tokens = np.zeros((b_pad, c_pad), np.int32)
+        starts = np.zeros(b_pad, np.int32)
+        lens = np.zeros(b_pad, np.int32)
+        tables = np.zeros((b_pad, self.pool.blocks_per_seq), np.int32)
+        for i, (req, ctx, take) in enumerate(zip(reqs, ctxs, takes)):
+            p = self._prefill_pos[req.req_id]
+            tokens[i, :take] = ctx[p:p + take]
+            starts[i] = p
+            lens[i] = take
+            tables[i] = self.pool.block_tables[self.pool.lane_of[req.req_id]]
+        logits, self.pool.cache = self._prefill_chunk_jit(
+            self.params, self.pool.cache, jnp.asarray(tokens),
+            jnp.asarray(starts), jnp.asarray(lens), jnp.asarray(tables))
+        self.stats.prefill_batches += 1
+        done_rows = [i for i, (req, ctx, take) in
+                     enumerate(zip(reqs, ctxs, takes))
+                     if self._prefill_pos[req.req_id] + take == len(ctx)]
+        nxt = None
+        if done_rows:
+            nxt = np.asarray(
+                jnp.argmax(logits[:, : self.model.cfg.vocab_size], axis=-1))
+            self.stats.host_syncs += 1
+        worked = 0
+        for i, (req, ctx, take) in enumerate(zip(reqs, ctxs, takes)):
+            self._prefill_pos[req.req_id] += take
+            self.stats.prefill_tokens += take
+            worked += take
+            if self._prefill_pos[req.req_id] == len(ctx):
+                rid = req.req_id
+                del self.prefilling[rid]
+                del self._prefill_pos[rid]
+                self.pool.set_length(self.pool.lane_of[rid], len(ctx))
+                if self.prefix_share:
+                    self.pool.register_prefix(rid, ctx)
+                self._activate(req, int(nxt[i]), now)
+        return worked
+
     def _preempt(self, req_ids: list) -> None:
         """Pool ran dry: drop these requests' blocks and requeue them at the
         front for recompute (prompt + generated-so-far become the context)."""
         for rid in req_ids:
-            req = self.active.pop(rid)
+            req = self.active.pop(rid, None)
+            if req is None:
+                req = self.prefilling.pop(rid)
+                del self._prefill_pos[rid]
             self.pool.release(rid)
-            self.queue.insert(0, req)
+            self.queue.appendleft(req)
             self.stats.preemptions += 1
 
-    def step(self, now: float | None = None) -> int:
-        """One scheduler iteration: admit + one decode step for all actives.
-
-        Returns number of decode tokens produced.
-        """
-        t0 = time.perf_counter()
-        now = now if now is not None else t0
-        self._admit(now)
+    def _decode_paged(self, now: float) -> int:
+        """Fused horizon decode: one jitted launch runs up to ``horizon``
+        steps for every active lane; the host syncs once to drain the
+        produced ``(tokens, emitted)`` horizon."""
+        budgets = {rid: req.max_new_tokens - len(req.output)
+                   for rid, req in self.active.items()}
+        # bucket the launch length so shrinking tail budgets don't retrace
+        n_eff = min(self.horizon,
+                    _bucket(max(1, max(budgets.values())), lo=1))
+        # allocate append blocks oldest-request-first; when the pool is
+        # exhausted the youngest actives are the ones preempted
+        victims = self.pool.ensure_append_blocks(
+            sorted(self.active), horizon=n_eff, budgets=budgets)
+        if victims:
+            self._preempt(victims)
         if not self.active:
             return 0
-        if self.paged:
-            # allocate append blocks oldest-request-first; when the pool is
-            # exhausted the youngest actives are the ones preempted
-            victims = self.pool.ensure_append_blocks(sorted(self.active))
-            if victims:
-                self._preempt(victims)
-            if not self.active:
-                return 0
-            lanes = {rid: self.pool.lane_of[rid] for rid in self.active}
-            width = self.pool.n_lanes
-        else:
-            lanes = {rid: self.pool.slot_of[rid] for rid in self.active}
-            width = self.pool.n_slots
+        width = self.pool.n_lanes
+        active_mask = np.zeros(width, bool)
+        budget_arr = np.zeros(width, np.int32)
+        eos_arr = np.full(width, -1, np.int32)
+        for rid, req in self.active.items():
+            lane = self.pool.lane_of[rid]
+            active_mask[lane] = True
+            budget_arr[lane] = budgets[rid]
+            if req.eos_id is not None:
+                eos_arr[lane] = req.eos_id
+        toks, emitted, _, (tok_f, pos_f, _, _), self.pool.cache = \
+            self._decode_multi_jit(
+                self.params, self.pool.cache, self.pool.last_tokens_dev(),
+                self.pool.positions(), self.pool.tables(),
+                jnp.asarray(active_mask), jnp.asarray(budget_arr),
+                jnp.asarray(eos_arr), num_steps=n_eff, max_len=self.max_seq)
+        toks_h = np.asarray(toks)        # the horizon's single host sync
+        em_h = np.asarray(emitted)
+        self.stats.host_syncs += 1
+        self.stats.decode_syncs += 1
+        # the loop's final device state becomes the pool mirror — nothing
+        # is re-uploaded next launch; numpy mirrors updated below
+        self.pool.adopt_device("positions", pos_f)
+        self.pool.adopt_device("last_tokens", tok_f)
+        produced = 0
+        finished = []
+        for rid, req in list(self.active.items()):
+            lane = self.pool.lane_of[rid]
+            cnt = int(em_h[:, lane].sum())
+            req.output.extend(int(t) for t in toks_h[:cnt, lane])
+            produced += cnt
+            self.pool.lengths[lane] += cnt
+            self.pool.last_tokens[lane] = req.output[-1]
+            full = int(self.pool.lengths[lane]) + 1 > self.max_seq
+            if (len(req.output) >= req.max_new_tokens
+                    or (req.eos_id is not None
+                        and req.output[-1] == req.eos_id) or full):
+                req.finish_s = now
+                finished.append(rid)
+        for rid in finished:
+            self.stats.completed.append(self.active.pop(rid))
+            self.pool.release(rid)
+        self.stats.decode_tokens += produced
+        return produced
+
+    def _decode_slots(self, now: float) -> int:
+        lanes = {rid: self.pool.slot_of[rid] for rid in self.active}
+        width = self.pool.n_slots
         tokens = [0] * width
         for rid, req in self.active.items():
             tokens[lanes[rid]] = req.output[-1]
         positions = self.pool.positions()
-        if self.paged:
-            logits, self.pool.cache = self._decode_jit(
-                self.params, self.pool.cache,
-                jnp.asarray(tokens, jnp.int32), positions, self.pool.tables())
-        else:
-            logits, self.pool.cache = self._decode_jit(
-                self.params, self.pool.cache,
-                jnp.asarray(tokens, jnp.int32), positions)
-        nxt = jnp.argmax(logits[:, : self.model.cfg.vocab_size], axis=-1)
+        logits, self.pool.cache = self._decode_jit(
+            self.params, self.pool.cache,
+            jnp.asarray(tokens, jnp.int32), positions)
+        nxt = np.asarray(
+            jnp.argmax(logits[:, : self.model.cfg.vocab_size], axis=-1))
+        self.stats.host_syncs += 1
+        self.stats.decode_syncs += 1
         produced = 0
         finished = []
         for rid, req in list(self.active.items()):
@@ -270,14 +488,32 @@ class Engine:
             self.stats.completed.append(self.active.pop(rid))
             self.pool.release(rid)
         self.stats.decode_tokens += produced
-        # simulated frequency knob: a capped clock stretches wall time
-        self.stats.step_times.append((time.perf_counter() - t0)
-                                     / max(self.knobs.freq_scale, 1e-3))
+        return produced
+
+    def step(self, now: float | None = None) -> int:
+        """One scheduler iteration: admit, advance chunked prefills, then
+        run one decode launch (a fused ``horizon``-step loop in paged
+        mode).  Returns number of decode tokens produced.
+        """
+        t0 = time.perf_counter()
+        now = now if now is not None else t0
+        self._admit(now)
+        prefilled = self._prefill_tick(now) \
+            if self.paged and self.prefill_chunk else 0
+        produced = 0
+        if self.active:
+            produced = self._decode_paged(now) if self.paged \
+                else self._decode_slots(now)
+        if produced or prefilled:
+            # simulated frequency knob: a capped clock stretches wall time
+            self.stats.record_step((time.perf_counter() - t0)
+                                   / max(self.knobs.freq_scale, 1e-3))
         return produced
 
     def run(self, *, max_steps: int = 10_000) -> EngineStats:
         steps = 0
-        while (self.queue or self.active) and steps < max_steps:
+        while (self.queue or self.active or self.prefilling) \
+                and steps < max_steps:
             self.step(now=float(steps))
             steps += 1
         return self.stats
@@ -286,10 +522,4 @@ class Engine:
     def goodput(self, *, ttft_slo: float, tbt_slo: float) -> float:
         """Tokens/s over completed requests meeting both SLOs (times are in
         scheduler-step units when run() supplies logical `now`)."""
-        good = 0
-        t_max = 1e-9
-        for r in self.stats.completed:
-            t_max = max(t_max, r.finish_s or 0.0)
-            if (r.ttft() or 0) <= ttft_slo and (r.tbt() or 0) <= tbt_slo:
-                good += len(r.output)
-        return good / t_max
+        return self.stats.goodput(ttft_slo=ttft_slo, tbt_slo=tbt_slo)

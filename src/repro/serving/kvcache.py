@@ -12,14 +12,35 @@ returns blocks to the free list in O(blocks held).  Physical block 0 is a
 reserved *parking block*: idle decode lanes point their whole table at it
 so a fixed-shape decode batch never reads unowned memory.
 
+Three hot-path extensions ride on the block pool:
+
+* **Persistent device buffers** — ``tables()`` / ``positions()`` /
+  ``last_tokens_dev()`` return cached device arrays that are updated
+  *incrementally* (donated-jit row/element scatters) as the host-side
+  allocator mutates, instead of re-uploading the full ``np -> jnp`` table
+  every decode step.  After a fused decode horizon the engine hands the
+  loop's final device state straight back via ``adopt_device`` — zero
+  re-upload on the steady-state decode path.
+* **Refcounted blocks + prefix sharing** — every block carries a
+  refcount; full prompt blocks are registered in a content-hash chain
+  index (``register_prefix``) so later requests with the same prefix
+  (``shared_prefix``) reuse the physical blocks instead of recomputing
+  and double-storing them.  Shared blocks are immutable by construction:
+  only *full* blocks strictly inside the prompt are ever registered, and
+  decode appends always land at positions past the prompt.
+* **Horizon-aware append allocation** — ``ensure_append_blocks`` can
+  reserve every block a lane may write within an N-step fused decode
+  horizon, so the jitted loop never needs a host round-trip to allocate.
+
 ``CachePool`` — the legacy slot-based pool.  One contiguous ``max_seq``
 cache per slot; insertion is a structural tree surgery on the batch dim.
-It remains the fallback for cache families the paged pool cannot hold
+It remains the fallback for cache families the block pool cannot hold
 (MLA latent, SWA ring, mamba/rwkv state) and the ground truth the paged
 engine is tested against.
 """
 from __future__ import annotations
 
+import hashlib
 from functools import partial
 from typing import Any
 
@@ -103,6 +124,23 @@ def _paged_insert(pool, prefill, blk_ids, row):
     return jax.tree.map(put, pool, prefill)
 
 
+@partial(jax.jit, donate_argnums=(0,))
+def _dev_set_row(arr, i, row):
+    return arr.at[i].set(row)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _dev_set_item(arr, i, v):
+    return arr.at[i].set(v)
+
+
+def _chain_key(prev: bytes, tokens) -> bytes:
+    """Collision-resistant running hash over block-sized token chunks."""
+    h = hashlib.blake2b(prev, digest_size=16)
+    h.update(np.asarray(tokens, np.int64).tobytes())
+    return h.digest()
+
+
 class PagedCachePool:
     """Global block-pool KV cache with per-request block tables."""
 
@@ -124,6 +162,52 @@ class PagedCachePool:
         self.blocks_of: dict[int, list] = {}  # req_id -> physical block ids
         self.block_tables = np.zeros((n_lanes, self.blocks_per_seq), np.int32)
         self.lengths = np.zeros(n_lanes, np.int32)  # tokens written per lane
+        self.last_tokens = np.zeros(n_lanes, np.int32)  # next decode input
+        # refcounts + prefix-sharing index; the index is a multimap of the
+        # LIVE physical copies of each content chunk (requests admitted in
+        # the same wave each write their own copy; any survivor can serve
+        # later arrivals after the others are released)
+        self.ref = np.zeros(self.n_blocks, np.int32)
+        self.prefix_index: dict[bytes, list] = {}
+        self.key_of: dict[int, bytes] = {}   # phys block -> its chain key
+        self.shared_block_hits = 0           # blocks reused via the index
+        # persistent device mirrors, updated incrementally
+        self._dev: dict[str, Any] = {}
+        self._dirty = {"tables", "positions", "last_tokens"}
+
+    # -- device mirrors ----------------------------------------------------
+    def _host_of(self, name: str):
+        return {"tables": self.block_tables, "positions": self.lengths,
+                "last_tokens": self.last_tokens}[name]
+
+    def _device(self, name: str) -> jnp.ndarray:
+        if name in self._dirty or name not in self._dev:
+            self._dev[name] = jnp.asarray(self._host_of(name),
+                                          dtype=jnp.int32)
+            self._dirty.discard(name)
+        return self._dev[name]
+
+    def _touch_row(self, lane: int) -> None:
+        """Mirror one block-table row to the device copy in place."""
+        if "tables" in self._dev and "tables" not in self._dirty:
+            self._dev["tables"] = _dev_set_row(
+                self._dev["tables"], lane,
+                jnp.asarray(self.block_tables[lane], jnp.int32))
+        else:
+            self._dirty.add("tables")
+
+    def _touch_item(self, name: str, lane: int) -> None:
+        if name in self._dev and name not in self._dirty:
+            self._dev[name] = _dev_set_item(
+                self._dev[name], lane, int(self._host_of(name)[lane]))
+        else:
+            self._dirty.add(name)
+
+    def adopt_device(self, name: str, arr: jnp.ndarray) -> None:
+        """Install a device array produced by the fused decode loop as the
+        new mirror (the caller keeps the numpy host state in sync)."""
+        self._dev[name] = arr
+        self._dirty.discard(name)
 
     # -- allocator ---------------------------------------------------------
     def blocks_for(self, n_tokens: int) -> int:
@@ -141,6 +225,41 @@ class PagedCachePool:
     def utilization(self) -> float:
         return self.used_blocks / max(self.n_blocks - 1, 1)
 
+    # -- prefix sharing ----------------------------------------------------
+    def shared_prefix(self, tokens: list) -> list:
+        """Physical blocks already holding a prefix of ``tokens``.
+
+        Walks the content-hash chain over full block-sized chunks and
+        returns the longest run of registered blocks.  At least one token
+        is always left unshared (capped at ``(len - 1) // block_size``
+        blocks) so the admitting request still prefills something and has
+        last-token logits to sample its first output from.
+        """
+        out = []
+        key = b""
+        for i in range((len(tokens) - 1) // self.block_size):
+            chunk = tokens[i * self.block_size:(i + 1) * self.block_size]
+            key = _chain_key(key, chunk)
+            copies = self.prefix_index.get(key)
+            if not copies:
+                break
+            out.append(copies[-1])
+        return out
+
+    def register_prefix(self, req_id: int, tokens: list) -> None:
+        """Publish a request's full, immutable prompt blocks in the prefix
+        index (decode appends land strictly past ``len(tokens)``, so every
+        full block inside the prompt is frozen)."""
+        blks = self.blocks_of[req_id]
+        key = b""
+        for i in range(len(tokens) // self.block_size):
+            chunk = tokens[i * self.block_size:(i + 1) * self.block_size]
+            key = _chain_key(key, chunk)
+            if blks[i] in self.key_of:
+                continue                     # this copy already registered
+            self.prefix_index.setdefault(key, []).append(blks[i])
+            self.key_of[blks[i]] = key
+
     # -- request lifecycle -------------------------------------------------
     def insert(self, req_id: int, prefill_cache: Any, row: int,
                prompt_len: int) -> int:
@@ -150,6 +269,7 @@ class PagedCachePool:
         n = self.blocks_for(prompt_len)
         assert len(self.free_blocks) >= n, "admission not gated by can_admit"
         blks = [self.free_blocks.pop() for _ in range(n)]
+        self.ref[blks] = 1
         self.cache = _paged_insert(self.cache, prefill_cache,
                                    jnp.asarray(blks, jnp.int32),
                                    jnp.asarray(row, jnp.int32))
@@ -158,43 +278,105 @@ class PagedCachePool:
         self.lengths[lane] = prompt_len
         self.lane_of[req_id] = lane
         self.blocks_of[req_id] = blks
+        self._touch_row(lane)
+        self._touch_item("positions", lane)
         return lane
 
-    def ensure_append_blocks(self, req_ids: list) -> list:
-        """Make sure each request can write its next token (position
-        ``lengths[lane]``); allocate a fresh block at block-boundary
+    def admit_prefill(self, req_id: int, ctx_len: int,
+                      shared_blocks: list | None = None) -> int | None:
+        """Chunked-prefill admission: allocate a lane plus every block the
+        context and its first decode append need, reusing refcounted
+        ``shared_blocks`` (from ``shared_prefix``) for the prompt head.
+
+        The pool's KV is written later, chunk by chunk, by the jitted
+        ``prefill_chunk_paged`` scatter; ``lengths`` starts at the shared
+        length (the only tokens already valid in the pool).  Returns the
+        lane, or None when lanes/blocks are exhausted.
+        """
+        shared = list(shared_blocks or [])
+        need_new = self.blocks_for(ctx_len + 1) - len(shared)
+        if not self.free_lanes or len(self.free_blocks) < need_new:
+            return None
+        lane = self.free_lanes.pop()
+        blks = shared + [self.free_blocks.pop() for _ in range(need_new)]
+        for b in shared:
+            self.ref[b] += 1
+        self.ref[blks[len(shared):]] = 1
+        self.shared_block_hits += len(shared)
+        self.block_tables[lane, :] = 0
+        self.block_tables[lane, : len(blks)] = blks
+        self.lengths[lane] = len(shared) * self.block_size
+        self.lane_of[req_id] = lane
+        self.blocks_of[req_id] = blks
+        self._touch_row(lane)
+        self._touch_item("positions", lane)
+        return lane
+
+    def ensure_append_blocks(self, req_ids: list, *, horizon: int = 1,
+                             budgets: dict | None = None) -> list:
+        """Make sure each request can write every token it may produce in
+        the next ``horizon`` fused decode steps (positions ``lengths`` ..
+        ``lengths + steps - 1``, ``steps`` capped by the per-request
+        ``budgets`` and ``max_seq``); allocate fresh blocks at boundary
         crossings.  Returns the req_ids that could NOT get a block — the
         engine preempts those (release + recompute later)."""
         victims = []
         for rid in req_ids:
             lane = self.lane_of[rid]
-            bi = int(self.lengths[lane]) // self.block_size
-            if bi < len(self.blocks_of[rid]):
-                continue
-            if bi >= self.blocks_per_seq or not self.free_blocks:
-                victims.append(rid)
-                continue
-            blk = self.free_blocks.pop()
-            self.blocks_of[rid].append(blk)
-            self.block_tables[lane, bi] = blk
+            steps = horizon if budgets is None else \
+                max(1, min(horizon, budgets.get(rid, horizon)))
+            target = min(int(self.lengths[lane]) + steps, self.max_seq)
+            need = self.blocks_for(target)
+            blks = self.blocks_of[rid]
+            grew = False
+            while len(blks) < need:
+                if len(blks) >= self.blocks_per_seq or not self.free_blocks:
+                    victims.append(rid)
+                    break
+                blk = self.free_blocks.pop()
+                self.ref[blk] = 1
+                self.block_tables[lane, len(blks)] = blk
+                blks.append(blk)
+                grew = True
+            if grew:
+                self._touch_row(lane)
         return victims
 
     def release(self, req_id: int) -> None:
         lane = self.lane_of.pop(req_id)
-        self.free_blocks.extend(reversed(self.blocks_of.pop(req_id)))
+        for b in reversed(self.blocks_of.pop(req_id)):
+            self.ref[b] -= 1
+            if self.ref[b] == 0:
+                self.free_blocks.append(b)
+                key = self.key_of.pop(b, None)
+                if key is not None:
+                    copies = self.prefix_index[key]
+                    copies.remove(b)
+                    if not copies:
+                        del self.prefix_index[key]
         self.free_lanes.append(lane)
         self.block_tables[lane, :] = 0       # park the lane on block 0
         self.lengths[lane] = 0
+        self._touch_row(lane)
+        self._touch_item("positions", lane)
 
     # -- decode-step views -------------------------------------------------
     def positions(self) -> jnp.ndarray:
         """Next write position per lane (parked lanes write into the
         parking block at offset 0; their output is discarded)."""
-        return jnp.asarray(self.lengths, jnp.int32)
+        return self._device("positions")
 
     def tables(self) -> jnp.ndarray:
-        return jnp.asarray(self.block_tables, jnp.int32)
+        return self._device("tables")
 
-    def advance(self, active_lanes: list) -> None:
-        for ln in active_lanes:
-            self.lengths[ln] += 1
+    def last_tokens_dev(self) -> jnp.ndarray:
+        """Per-lane next decode input token, device-resident."""
+        return self._device("last_tokens")
+
+    def set_length(self, lane: int, n: int) -> None:
+        self.lengths[lane] = n
+        self._touch_item("positions", lane)
+
+    def set_last_token(self, lane: int, tok: int) -> None:
+        self.last_tokens[lane] = tok
+        self._touch_item("last_tokens", lane)

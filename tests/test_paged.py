@@ -76,6 +76,44 @@ def test_paged_decode_masks_future():
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
 
 
+@pytest.mark.parametrize("B,C,H,K,D,bs,T", [
+    (2, 8, 8, 2, 64, 16, 8),   # GQA 4:1, 8-token chunk
+    (1, 16, 4, 4, 64, 16, 4),  # MHA, chunk spans a block boundary
+    (3, 4, 4, 1, 32, 8, 8),    # MQA
+])
+def test_paged_prefill_matches_ref(B, C, H, K, D, bs, T):
+    """Chunk queries at ragged start offsets over a scrambled pool."""
+    rng = np.random.default_rng(B * 100 + C)
+    n_blocks = 1 + B * T
+    kp, vp = arr(rng, n_blocks, bs, K, D), arr(rng, n_blocks, bs, K, D)
+    q = arr(rng, B, C, H, D)
+    starts = jnp.asarray(rng.integers(0, T * bs - C, B), jnp.int32)
+    ids = rng.permutation(np.arange(1, n_blocks))[: B * T].reshape(B, T)
+    bt = jnp.asarray(ids, jnp.int32)
+    o = ops.paged_prefill_attention(q, kp, vp, bt, starts)
+    o_ref = ref.paged_prefill_attention_ref(q, kp, vp, bt, starts)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=1e-5)
+
+
+def test_paged_prefill_chunk_equals_decode_steps():
+    """A C-token chunk attends exactly like C successive decode steps
+    whose KV is already in place (same pool, same block tables)."""
+    rng = np.random.default_rng(5)
+    B, H, K, D, bs, T = 2, 4, 2, 32, 8, 4
+    C = 6
+    n_blocks = 1 + B * T
+    kp, vp = arr(rng, n_blocks, bs, K, D), arr(rng, n_blocks, bs, K, D)
+    q = arr(rng, B, C, H, D)
+    starts = jnp.asarray([5, 11], jnp.int32)
+    bt = jnp.asarray(rng.permutation(np.arange(1, n_blocks))
+                     .reshape(B, T), jnp.int32)
+    o_chunk = ops.paged_prefill_attention(q, kp, vp, bt, starts)
+    for c in range(C):
+        o_one = ops.paged_decode_attention(q[:, c], kp, vp, bt, starts + c)
+        np.testing.assert_allclose(np.asarray(o_chunk[:, c]),
+                                   np.asarray(o_one), atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # PagedCachePool allocator invariants
 # ---------------------------------------------------------------------------
