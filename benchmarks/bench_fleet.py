@@ -1,0 +1,106 @@
+"""Fleet benchmark: global risk-weighted routing vs per-region greedy.
+
+Runs the scripted regional-cooling-failure drill (the ``geo_fleet``
+example scenario: three regions with divergent weather, a thermal
+emergency + heat wave + demand surge hitting the hot region) under the
+two fleet policies, with the per-region TAPAS control planes held fixed:
+
+* ``latency`` — ``LatencyOnlyRouter``, the per-region-greedy baseline.
+* ``global``  — ``GlobalTapasRouter``, risk-weighted cross-region
+  steering + emergency VM drains.
+
+Metrics are deterministic simulation outcomes (throttle events, unserved
+fraction, served quality, load moved, WAN overhead, migrations) — no
+wall-clock noise.  Emits ``benchmarks/BENCH_fleet.json`` (checked in, the
+recorded trajectory).  ``--smoke`` runs the drill at one seed and asserts
+the global router finishes with strictly fewer throttle events than the
+latency-only baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+for p in (str(_ROOT), str(_ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from benchmarks.common import RESULTS  # noqa: E402
+# the drill itself lives with the example so the CI example smoke and the
+# recorded bench numbers can never drift apart
+from examples.geo_fleet import make_fleet  # noqa: E402
+from repro.core.fleet import (GlobalTapasRouter,  # noqa: E402
+                              LatencyOnlyRouter)
+
+CHECKED_IN = _ROOT / "benchmarks" / "BENCH_fleet.json"
+
+
+def run_pair(seed: int) -> dict:
+    rows = {}
+    for label, policy in (("latency", LatencyOnlyRouter),
+                          ("global", GlobalTapasRouter)):
+        s = make_fleet(policy, seed=seed).run().summary()
+        rows[label] = {
+            "throttle_events": s["throttle_events"],
+            "thermal_events": s["thermal_events"],
+            "power_events": s["power_events"],
+            "unserved_frac": s["unserved_frac"],
+            "mean_quality": s["mean_quality"],
+            "moved_load": s["moved_load"],
+            "wan_overhead": s["wan_overhead"],
+            "migrations": s["migrations"],
+            "per_region_thermal": {n: r["thermal_events"]
+                                   for n, r in s["regions"].items()},
+        }
+        print(f"seed={seed} {label:8s} "
+              f"throttle={rows[label]['throttle_events']:3d} "
+              f"unserved={rows[label]['unserved_frac']:.4f} "
+              f"moved={rows[label]['moved_load']:.1f} "
+              f"migs={rows[label]['migrations']}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one seed + assert global beats latency-only "
+                         "on throttle events")
+    ap.add_argument("--seeds", type=int, default=3)
+    args = ap.parse_args()
+
+    seeds = [0] if args.smoke else list(range(args.seeds))
+    per_seed = {seed: run_pair(seed) for seed in seeds}
+    agg = {label: sum(per_seed[s][label]["throttle_events"] for s in seeds)
+           for label in ("latency", "global")}
+    payload = {
+        "bench": "fleet_regional_failure",
+        "mode": "smoke" if args.smoke else "full",
+        "drill": "3 regions (hot/mild/cold), thermal emergency + heat wave "
+                 "+ surge on the hot region, hours 3-10 of 12",
+        "per_seed": per_seed,
+        "throttle_events_total": agg,
+    }
+    out = RESULTS / "BENCH_fleet.json" if args.smoke else CHECKED_IN
+    out.write_text(json.dumps(payload, indent=1) + "\n")
+    print(f"wrote {out}")
+    print(f"throttle events (all seeds): latency {agg['latency']} "
+          f"-> global {agg['global']}")
+
+    if args.smoke:
+        assert out.exists(), "BENCH_fleet.json not produced"
+        lat = per_seed[0]["latency"]
+        glo = per_seed[0]["global"]
+        assert glo["moved_load"] > 0.0, \
+            "the global router never steered load during the drill"
+        assert glo["throttle_events"] < lat["throttle_events"], (
+            f"global router must beat the latency-only baseline on "
+            f"throttle events: {glo['throttle_events']} !< "
+            f"{lat['throttle_events']}")
+        print("smoke OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,9 +11,14 @@ from repro.core.allocator import (AllocatorState, BaselineAllocator,
 from repro.core.configurator import InstanceConfigurator, ReconfigurePolicy
 from repro.core.datacenter import (Datacenter, DCConfig, HWProfile,
                                    scale_datacenter)
+from repro.core.fleet import (FleetConfig, FleetKnobs, FleetPolicy,
+                              FleetResult, FleetSim, FleetState,
+                              GlobalTapasRouter, LatencyOnlyRouter,
+                              Migration, RegionSpec)
 from repro.core.power import PowerModel, row_power
 from repro.core.risk import (DEFAULT_RISK_KNOBS, DEFAULT_THRESHOLDS,
-                             ReconfigureThresholds, RiskKnobs, server_risk)
+                             ReconfigureThresholds, RiskKnobs, region_risk,
+                             server_risk)
 from repro.core.router import (BaselineRouter, RoutingPolicy, TapasRouter)
 from repro.core.scenario import (DemandSurge, FailureEvent, Scenario,
                                  VMArrival, WeatherShift)
@@ -31,7 +36,10 @@ __all__ = [
     "Datacenter", "DCConfig", "HWProfile", "scale_datacenter",
     "PowerModel", "row_power", "BaselineRouter", "TapasRouter",
     "RoutingPolicy", "DEFAULT_RISK_KNOBS", "DEFAULT_THRESHOLDS",
-    "ReconfigureThresholds", "RiskKnobs", "server_risk",
+    "ReconfigureThresholds", "RiskKnobs", "region_risk", "server_risk",
+    "FleetConfig", "FleetKnobs", "FleetPolicy", "FleetResult", "FleetSim",
+    "FleetState", "GlobalTapasRouter", "LatencyOnlyRouter", "Migration",
+    "RegionSpec",
     "DemandSurge", "FailureEvent", "Scenario", "VMArrival", "WeatherShift",
     "BASELINE", "TAPAS", "ClusterSim", "CompositeControlPlane", "Policy",
     "SimConfig", "SimResult", "build_control_policy", "run_policy",

@@ -114,3 +114,20 @@ def server_risk(dc: Datacenter, thermal: ThermalModel, power: PowerModel, *,
         n_per_aisle * th.airflow_max, 1.0)
     a_risk = np.clip(knobs.air_headroom_margin - a_head, 0.0, 1.0)[dc.aisle_of]
     return np.maximum.reduce([t_risk, p_risk, a_risk])
+
+
+def region_risk(risk: np.ndarray, kind: np.ndarray, *,
+                quantile: float = 0.8) -> float:
+    """Lift per-server violation risk to one regional score in [0, 1].
+
+    The fleet router reasons about regions the way ``server_risk`` lets the
+    cluster router reason about servers: "how likely is this region to trip
+    a limit if handed more load".  A high quantile of the occupied servers'
+    risk (not the mean) is what matters — steering decisions are driven by
+    the hot tail that will throttle first, and a mostly-cold region with
+    one hot row must still repel load from that row's capacity share.
+    """
+    occupied = np.asarray(risk)[np.asarray(kind) > 0]
+    if occupied.size == 0:
+        return 0.0
+    return float(np.quantile(occupied, quantile))

@@ -32,7 +32,8 @@ class RouteDecision:
 
 class BaselineRouter:
     def route(self, demand: float, capacity: np.ndarray, risk: np.ndarray,
-              affinity: np.ndarray | None = None) -> RouteDecision:
+              affinity: np.ndarray | None = None,
+              ids: np.ndarray | None = None) -> RouteDecision:
         n = len(capacity)
         if n == 0:
             return RouteDecision(np.zeros(0), demand)
@@ -51,10 +52,15 @@ class TapasRouter:
         self.pack = pack
 
     def route(self, demand: float, capacity: np.ndarray, risk: np.ndarray,
-              affinity: np.ndarray | None = None) -> RouteDecision:
+              affinity: np.ndarray | None = None,
+              ids: np.ndarray | None = None) -> RouteDecision:
+        """``ids`` (server ids, positional) breaks packing-order ties:
+        candidates equal on (risk, load) fill lowest-id first, so results
+        do not depend on the endpoint list's historical insertion order."""
         n = len(capacity)
         if n == 0:
             return RouteDecision(np.zeros(0), demand)
+        ids = np.arange(n) if ids is None else np.asarray(ids)
         usable = risk < self.risk_threshold
         cap = np.where(usable, capacity, 0.0)
         load = np.zeros(n)
@@ -74,7 +80,7 @@ class TapasRouter:
             # 2) energy packing only while the endpoint runs light — at high
             # load concentration trades directly against peak row power
             if self.pack and demand < 0.4 * max(cap.sum(), 1e-9):
-                order = np.lexsort((-load, risk))
+                order = np.lexsort((ids, -load, risk))
                 for i in order:
                     take = min(headroom[i], remaining)
                     load[i] += take
@@ -142,7 +148,7 @@ class RoutingPolicy:
             aff = prev[1]
         else:
             aff = np.zeros(len(idx))
-        dec = self.router.route(demand, caps, state.risk[idx], aff)
+        dec = self.router.route(demand, caps, state.risk[idx], aff, ids=idx)
         self._affinity[endpoint] = (idx, dec.load.copy())
         return EndpointRoute(servers=idx, load=dec.load,
                              quality=np.asarray(quals),

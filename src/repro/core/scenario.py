@@ -7,10 +7,19 @@ at construction — a typo'd ``kind="upss"`` raises immediately instead of
 being silently ignored mid-drill — and ``failures.py``, ``oversubscribe.py``
 and the benchmarks all script their runs through this one API instead of
 hand-rolled tuples.
+
+Events carry an optional ``region`` tag for fleet-scale runs
+(``core.fleet.FleetSim``): ``region="eu"`` scopes the event to that region's
+cluster, ``region=None`` means fleet-wide (every region) — except for
+``VMArrival``, where ``region=None`` inside a fleet scenario means "let the
+``FleetPolicy.admit_region`` hook choose the region".  A single-cluster
+``ClusterSim`` rejects region-tagged events at construction (the tag would
+otherwise be silently ignored); ``Scenario.for_region`` strips the tags
+when a fleet hands each region its slice.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 FAILURE_KINDS = ("ahu", "ups", "cooling", "thermal")
 VM_KINDS = ("iaas", "saas")
@@ -22,6 +31,13 @@ def _check_window(start_h: float, end_h: float) -> None:
     if end_h <= start_h:
         raise ValueError(
             f"event window is empty or inverted: [{start_h}, {end_h})")
+
+
+def _check_region(region) -> None:
+    if region is not None and (not isinstance(region, str) or not region):
+        raise ValueError(
+            f"event region must be None or a non-empty region name, "
+            f"got {region!r}")
 
 
 @dataclass(frozen=True)
@@ -38,7 +54,8 @@ class FailureEvent:
     start_h: float
     end_h: float
     target: int = 0    # aisle id (ahu/thermal); must stay 0 for the
-    #                    fleet-wide kinds (ups/cooling)
+    #                    cluster-wide kinds (ups/cooling)
+    region: str | None = None   # fleet runs: scope to one region
 
     def __post_init__(self):
         if self.kind not in FAILURE_KINDS:
@@ -46,11 +63,12 @@ class FailureEvent:
                 f"unknown failure kind {self.kind!r}; expected one of "
                 f"{FAILURE_KINDS}")
         _check_window(self.start_h, self.end_h)
+        _check_region(self.region)
         if self.target < 0:
             raise ValueError(f"failure target must be >= 0, got {self.target}")
         if self.kind in ("ups", "cooling") and self.target != 0:
             raise ValueError(
-                f"{self.kind} failures are fleet-wide; target={self.target} "
+                f"{self.kind} failures are cluster-wide; target={self.target} "
                 f"would be silently ignored — leave it at 0")
 
     def active(self, now_h: float) -> bool:
@@ -64,9 +82,11 @@ class DemandSurge:
     end_h: float
     scale: float              # multiplier on routed demand (> 0)
     endpoint: str | None = None   # None == every endpoint
+    region: str | None = None     # fleet runs: scope to one region
 
     def __post_init__(self):
         _check_window(self.start_h, self.end_h)
+        _check_region(self.region)
         if self.scale <= 0.0:
             raise ValueError(f"surge scale must be > 0, got {self.scale}")
 
@@ -81,9 +101,11 @@ class WeatherShift:
     start_h: float
     end_h: float
     delta_c: float
+    region: str | None = None     # fleet runs: scope to one region
 
     def __post_init__(self):
         _check_window(self.start_h, self.end_h)
+        _check_region(self.region)
 
     def active(self, now_h: float) -> bool:
         return self.start_h <= now_h < self.end_h
@@ -101,6 +123,8 @@ class VMArrival:
     customer: str             # endpoint name (saas) / customer template
     lifetime_h: float
     peak_util: float = 1.0
+    region: str | None = None   # fleet runs: pin to a region; None lets
+    #                             FleetPolicy.admit_region choose
 
     def __post_init__(self):
         if self.kind not in VM_KINDS:
@@ -160,6 +184,33 @@ class Scenario:
 
     def vm_arrivals(self) -> list:
         return [ev for ev in self.events if isinstance(ev, VMArrival)]
+
+    # -- fleet accessors ---------------------------------------------------
+    def regions_named(self) -> set:
+        """Every region name any event is scoped to (for validation)."""
+        return {ev.region for ev in self.events if ev.region is not None}
+
+    def for_region(self, name: str) -> "Scenario":
+        """The slice of this fleet scenario one region's cluster replays.
+
+        Keeps events scoped to ``name`` and untagged fleet-wide events,
+        with the region tag stripped (``ClusterSim`` rejects tagged
+        events) — except untagged ``VMArrival``s, which belong to the
+        fleet admission path (``FleetPolicy.admit_region``), not to any
+        one region's workload.
+        """
+        out = []
+        for ev in self.events:
+            if isinstance(ev, VMArrival) and ev.region is None:
+                continue
+            if ev.region in (None, name):
+                out.append(replace(ev, region=None))
+        return Scenario(tuple(out))
+
+    def fleet_arrivals(self) -> list:
+        """Untagged VM arrivals a fleet admits via ``admit_region``."""
+        return [ev for ev in self.events
+                if isinstance(ev, VMArrival) and ev.region is None]
 
     def __add__(self, other: "Scenario") -> "Scenario":
         return Scenario(self.events + tuple(other.events))

@@ -53,7 +53,7 @@ from repro.core.scenario import DemandSurge, FailureEvent, VMArrival  # noqa: F4
 from repro.core.state import ClusterState, ControlPolicy, InstanceView
 from repro.core.thermal import ThermalModel, outside_temperature
 from repro.core.traces import (VMSpec, endpoint_load, generate_workload,
-                               iaas_util)
+                               iaas_util, trace_seed)
 
 
 @dataclass(frozen=True)
@@ -96,6 +96,12 @@ class SimConfig:
     # None derives it from ``policy.config`` — set explicitly when driving
     # a custom ``control`` whose reconfigure behavior the flags don't know.
     iaas_only_capping: bool | None = None
+    # fleet identity: the region label stamped on every ClusterState, and
+    # the trace-seed namespace (see ``traces.trace_seed``) that keeps two
+    # regions with identical configs from replaying identical weather /
+    # customer / endpoint noise.  Both default to the standalone behavior.
+    region_name: str = ""
+    trace_namespace: str = ""
 
 
 @dataclass
@@ -177,11 +183,17 @@ class ClusterSim:
         self.power = PowerModel.calibrate(self.dc)
         self.scenario = as_scenario(cfg.scenario, cfg.failures)
         self._validate_scenario_targets()
+        self._tseed = trace_seed(cfg.seed, cfg.trace_namespace)
         self.work = generate_workload(
             n_servers=self.dc.n_servers, horizon_h=cfg.horizon_h,
-            seed=cfg.seed, saas_fraction=cfg.saas_fraction,
+            seed=self._tseed, saas_fraction=cfg.saas_fraction,
             occupancy=cfg.occupancy)
         self._inject_scripted_vms()
+        # pristine workload watermark: reset() truncates back to it, so
+        # mid-run inject_vm() calls (fleet admissions/migrations) are not
+        # replayed as scripted arrivals on a rerun
+        self._n_base_vms = len(self.work.vms)
+        self._base_endpoints = set(self.work.endpoints)
         self.nominal = P._entry(P.NOMINAL)
         self.ticks = int(cfg.horizon_h * 60 / cfg.tick_min)
         self.t_h = np.arange(self.ticks) * cfg.tick_min / 60.0
@@ -192,6 +204,11 @@ class ClusterSim:
         topology — catch an out-of-range aisle target here instead of an
         IndexError hours into the drill."""
         for ev in self.scenario.events:
+            if getattr(ev, "region", None) is not None:
+                raise ValueError(
+                    f"event {ev!r} is scoped to region {ev.region!r}, but "
+                    f"this is a single-cluster sim — region-tagged events "
+                    f"need core.fleet.FleetSim (or drop the tag)")
             if (isinstance(ev, FailureEvent) and ev.kind in ("ahu", "thermal")
                     and ev.target >= self.dc.n_aisles):
                 raise ValueError(
@@ -233,9 +250,19 @@ class ClusterSim:
             self.policy = cfg.control
         self.alloc_state = AllocatorState.empty(self.dc, self.thermal,
                                                 self.power)
+        # drop VMs injected mid-run (fleet admissions/migrations) so the
+        # rerun replays only the generated + scripted workload
+        del self.work.vms[self._n_base_vms:]
+        for name in list(self.work.endpoints):
+            ids = [v for v in self.work.endpoints[name]
+                   if v < self._n_base_vms]
+            if ids or name in self._base_endpoints:
+                self.work.endpoints[name] = ids
+            else:
+                del self.work.endpoints[name]
         self.tick = 0
         t_out = np.array(outside_temperature(cfg.dc.region, self.t_h,
-                                             seed=cfg.seed))
+                                             seed=self._tseed))
         if any(isinstance(ev, WeatherShift) for ev in self.scenario.events):
             t_out = t_out + np.array([self.scenario.weather_delta(float(t))
                                       for t in self.t_h])
@@ -300,6 +327,8 @@ class ClusterSim:
                     self._server_ep[srv] = vm.customer
         while self._departures and self._departures[0][0] <= now:
             _, _, srv, vm = heapq.heappop(self._departures)
+            if self._vm_on.get(srv) is not vm:
+                continue   # evicted (fleet migration); server may be reused
             self.alloc_state.release(srv)
             self._vm_on.pop(srv, None)
             if vm.kind == "saas" and srv in self._server_ep:
@@ -314,7 +343,7 @@ class ClusterSim:
         for srv, vm in self._vm_on.items():
             if vm.kind == "iaas":
                 util_srv[srv] = iaas_util(vm, np.asarray([now]),
-                                          seed=cfg.seed)[0]
+                                          seed=self._tseed)[0]
         state.iaas_util = util_srv
 
         # -- instance telemetry + capacity/risk forecasts ------------
@@ -359,7 +388,8 @@ class ClusterSim:
                 cooling_extra = 2.5
         return ClusterState(
             tick=ti, now_h=now, t_outside_c=float(self._t_out[ti]),
-            seed=self.cfg.seed, dc=dc, nominal=self.nominal,
+            seed=self._tseed, dc=dc, nominal=self.nominal,
+            region=self.cfg.region_name,
             alloc=self.alloc_state, kind=self.alloc_state.kind_of,
             vm_of=self.alloc_state.vm_of, endpoints=self._ep_servers,
             emergency=emergency, ahu_derate=ahu_derate,
@@ -373,18 +403,36 @@ class ClusterSim:
     # ------------------------------------------------------------------
     # route: endpoint demand through the policy
     # ------------------------------------------------------------------
-    def route(self, state: ClusterState) -> None:
+    def endpoint_demand(self, ep: str, now: float) -> float:
+        """This cluster's natural demand for ``ep`` at ``now`` (diurnal
+        trace x fleet scale x scenario surges) — the quantity ``route``
+        uses when no external driver overrides it, exposed so a fleet
+        router can read every region's demand before redistributing it."""
         cfg = self.cfg
+        demand = (endpoint_load(ep, np.asarray([now]),
+                                seed=self._tseed)[0]
+                  * len(self._ep_servers[ep]) * cfg.demand_scale)
+        surge = self.scenario.demand_scale(now, ep)
+        if surge != 1.0:
+            demand = demand * surge
+        return demand
+
+    def route(self, state: ClusterState,
+              demand_overrides: dict | None = None) -> None:
+        """Route every endpoint's demand through the policy.
+
+        ``demand_overrides`` (endpoint -> demand) substitutes an external
+        driver's figure — a ``FleetSim`` steering load across regions —
+        for the cluster's natural ``endpoint_demand``; endpoints not in
+        the dict fall back to the natural demand."""
         now = state.now_h
         for ep, servers in state.endpoints.items():
             if not servers:
                 continue
-            demand = (endpoint_load(ep, np.asarray([now]),
-                                    seed=cfg.seed)[0]
-                      * len(servers) * cfg.demand_scale)
-            surge = self.scenario.demand_scale(now, ep)
-            if surge != 1.0:
-                demand = demand * surge
+            if demand_overrides is not None and ep in demand_overrides:
+                demand = demand_overrides[ep]
+            else:
+                demand = self.endpoint_demand(ep, now)
             out = self.policy.route(state, ep, demand)
             state.saas_load[out.servers] = out.load
             state.quality[out.servers] = out.quality
@@ -518,6 +566,14 @@ class ClusterSim:
                 f"call reset() to rerun")
         state = self.observe()
         self.route(state)
+        return self.finish_tick(state)
+
+    def finish_tick(self, state: ClusterState) -> ClusterState:
+        """The tick's trailing half: reconfigure, backend sync, physics,
+        tick advance.  Split out of ``step`` so external drivers (a
+        ``FleetSim`` steering demand between ``observe`` and ``route``)
+        share the exact reconfigure/apply code path instead of forking it.
+        """
         changes = self.policy.reconfigure(state)
         # fold the decisions into the instance telemetry so the contract is
         # "return your changes" — policies need not also mutate
@@ -530,6 +586,45 @@ class ClusterSim:
         self.apply(state)
         self.tick += 1
         return state
+
+    # ------------------------------------------------------------------
+    # fleet hooks: mid-run VM injection (scripted fleet admissions,
+    # cross-region migrations) and eviction (drains)
+    # ------------------------------------------------------------------
+    def inject_vm(self, *, kind: str, customer: str, arrival_h: float,
+                  lifetime_h: float, peak_util: float = 1.0) -> VMSpec:
+        """Append a VM to this cluster's pending arrivals mid-run.
+
+        Placement happens in the next ``observe`` whose time has reached
+        ``arrival_h`` — a fleet admission or migration therefore lands one
+        tick after the decision (the WAN transfer is not instantaneous).
+        New SaaS endpoint names are created on the fly.
+        """
+        vm = VMSpec(len(self.work.vms), kind, customer, arrival_h=arrival_h,
+                    lifetime_h=lifetime_h, peak_util=peak_util)
+        self.work.vms.append(vm)
+        if kind == "saas":
+            self.work.endpoints.setdefault(customer, [])
+            self.work.endpoints[customer].append(vm.vm_id)
+            self._ep_servers.setdefault(customer, [])
+        heapq.heappush(self._pending, (arrival_h, next(self._evseq), vm))
+        return vm
+
+    def evict(self, state: ClusterState, server: int) -> VMSpec | None:
+        """Immediately remove the VM on ``server`` (fleet drain/migration).
+
+        Releases occupancy and policy state exactly like a departure; the
+        VM's scheduled departure event becomes a no-op (guarded by object
+        identity).  Returns the evicted ``VMSpec`` so the fleet can
+        re-inject it elsewhere, or None when the server is empty."""
+        vm = self._vm_on.pop(server, None)
+        if vm is None:
+            return None
+        self.alloc_state.release(server)
+        if vm.kind == "saas" and server in self._server_ep:
+            self._ep_servers[self._server_ep.pop(server)].remove(server)
+        self.policy.release(state, server)
+        return vm
 
     def _sync_backends(self, state: ClusterState, changes: list) -> None:
         """Mirror reconfigure decisions onto bound engines and report the

@@ -91,6 +91,10 @@ class ClusterState:
     prov_row_power_w: np.ndarray       # (R,) envelope after derates
     prov_aisle_cfm: np.ndarray         # (A,) envelope after derates
 
+    # -- fleet identity ----------------------------------------------------
+    region: str = ""                   # region name inside a FleetSim ("" ==
+    #                                    standalone single-cluster run)
+
     # -- telemetry (filled by observe) ------------------------------------
     iaas_util: np.ndarray = None       # (S,) IaaS trace utilization
     freq_cap: np.ndarray = None        # (S,) persistent power-cap state

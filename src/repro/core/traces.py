@@ -25,6 +25,22 @@ def _stable_seed(*parts) -> int:
     return zlib.crc32(repr(parts).encode())
 
 
+def trace_seed(seed: int, namespace: str = "") -> int:
+    """Namespace a trace seed by region name (crc32, process-stable).
+
+    Two regions of a fleet configured with the same ``seed`` must not
+    replay identical weather wobble, customer phases and endpoint peaks —
+    that would make every region's thermal trajectory a copy and
+    cross-region steering trivially pointless.  An empty namespace returns
+    ``seed`` unchanged, so single-cluster runs (and their golden parity
+    numbers) are bit-identical to the pre-fleet behavior.
+    """
+    if not namespace:
+        return seed
+    # int32-safe: the seed reaches jitted JAX code (weather wobble phase)
+    return _stable_seed("region", namespace, seed) % (2 ** 31)
+
+
 @dataclass
 class VMSpec:
     vm_id: int

@@ -19,6 +19,14 @@ decisions land on actual serving knobs.
 The backend is telemetry-only with respect to the physics: attaching
 engines never changes the simulated thermal/power trajectory, so
 simulation results stay reproducible with or without live engines.
+
+Backends work unchanged inside a fleet: ``FleetSim.attach_backend(region,
+server, backend)`` binds the engine to one region's cluster, and the
+region's own reconfigure decisions keep landing on the engine's knobs
+(the fleet layer only redirects demand).  If a fleet migration evicts the
+bound server, the backend idles — ``pump`` receives zero load until the
+server hosts SaaS again — rather than erroring; rebind to the VM's new
+region to follow it across the WAN.
 """
 from __future__ import annotations
 

@@ -151,6 +151,8 @@ class Engine:
         self.active: dict[int, Request] = {}
         self.prefilling: dict[int, Request] = {}
         self._prefill_pos: dict[int, int] = {}
+        self._pending_waiter: int | None = None   # req deferred on a
+        #                                           pending shared prefill
         self.stats = EngineStats()
         self._bind(model)
 
@@ -324,6 +326,16 @@ class Engine:
                 continue
             shared = self.pool.shared_prefix(ctx) if self.prefix_share \
                 else []
+            if self.prefix_share and self.pool.pending_shared(
+                    ctx, have=len(shared)):
+                # an in-flight prefill owns this prompt's next shareable
+                # block: wait at the queue head and attach to its copy
+                # instead of writing a duplicate (pending claims are
+                # released on preemption, so the wait cannot deadlock)
+                if self.queue[0].req_id != self._pending_waiter:
+                    self._pending_waiter = self.queue[0].req_id
+                    self.pool.pending_share_waits += 1
+                break
             lane = self.pool.admit_prefill(self.queue[0].req_id, len(ctx),
                                            shared)
             if lane is None:
@@ -332,6 +344,8 @@ class Engine:
             self.prefilling[req.req_id] = req
             self._prefill_pos[req.req_id] = \
                 len(shared) * self.pool.block_size
+            if self.prefix_share:
+                self.pool.register_pending(req.req_id, ctx)
         return
 
     def _prefill_tick(self, now: float) -> int:

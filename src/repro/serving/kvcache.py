@@ -27,7 +27,11 @@ Three hot-path extensions ride on the block pool:
   (``shared_prefix``) reuse the physical blocks instead of recomputing
   and double-storing them.  Shared blocks are immutable by construction:
   only *full* blocks strictly inside the prompt are ever registered, and
-  decode appends always land at positions past the prompt.
+  decode appends always land at positions past the prompt.  Same-wave
+  duplicates are deduped too: admission claims its chain keys up front
+  (``register_pending``), and a request whose next shareable block is
+  owned by an in-flight prefill (``pending_shared``) waits and attaches
+  to the owner's blocks once they publish.
 * **Horizon-aware append allocation** — ``ensure_append_blocks`` can
   reserve every block a lane may write within an N-step fused decode
   horizon, so the jitted loop never needs a host round-trip to allocate.
@@ -164,13 +168,21 @@ class PagedCachePool:
         self.lengths = np.zeros(n_lanes, np.int32)  # tokens written per lane
         self.last_tokens = np.zeros(n_lanes, np.int32)  # next decode input
         # refcounts + prefix-sharing index; the index is a multimap of the
-        # LIVE physical copies of each content chunk (requests admitted in
-        # the same wave each write their own copy; any survivor can serve
-        # later arrivals after the others are released)
+        # LIVE physical copies of each content chunk
         self.ref = np.zeros(self.n_blocks, np.int32)
         self.prefix_index: dict[bytes, list] = {}
         self.key_of: dict[int, bytes] = {}   # phys block -> its chain key
         self.shared_block_hits = 0           # blocks reused via the index
+        # pending-share dedup: chain keys an in-flight prefill will publish
+        # once it completes.  A same-wave request with the same prompt head
+        # waits for the owner instead of writing its own copy (without this
+        # two requests admitted together both prefill an identical head).
+        self.pending_index: dict[bytes, int] = {}   # chain key -> req_id
+        self.pending_of: dict[int, list] = {}       # req_id -> its keys
+        # distinct admissions that deferred to attach to an in-flight
+        # prefill (incremented by the engine once per waiting request,
+        # not per poll)
+        self.pending_share_waits = 0
         # persistent device mirrors, updated incrementally
         self._dev: dict[str, Any] = {}
         self._dirty = {"tables", "positions", "last_tokens"}
@@ -259,6 +271,44 @@ class PagedCachePool:
                 continue                     # this copy already registered
             self.prefix_index.setdefault(key, []).append(blks[i])
             self.key_of[blks[i]] = key
+        self._clear_pending(req_id)
+
+    # -- pending-share dedup -----------------------------------------------
+    def register_pending(self, req_id: int, tokens: list) -> None:
+        """Claim the chain keys this admission will publish when its
+        prefill completes, so identical same-wave prompt heads wait and
+        attach instead of each writing their own copy.  First claimant
+        wins; keys already live in ``prefix_index`` need no claim."""
+        keys = []
+        key = b""
+        for i in range(len(tokens) // self.block_size):
+            chunk = tokens[i * self.block_size:(i + 1) * self.block_size]
+            key = _chain_key(key, chunk)
+            if key not in self.pending_index and key not in self.prefix_index:
+                self.pending_index[key] = req_id
+                keys.append(key)
+        if keys:
+            self.pending_of[req_id] = keys
+
+    def pending_shared(self, tokens: list, *, have: int) -> bool:
+        """True when another in-flight prefill owns the *next* shareable
+        block of this prompt (block index ``have``, the first one past
+        what ``shared_prefix`` already found) — the caller should defer
+        admission until the owner publishes and the head becomes
+        attachable."""
+        n_full = (len(tokens) - 1) // self.block_size
+        if have >= n_full:
+            return False
+        key = b""
+        for i in range(have + 1):
+            chunk = tokens[i * self.block_size:(i + 1) * self.block_size]
+            key = _chain_key(key, chunk)
+        return key in self.pending_index
+
+    def _clear_pending(self, req_id: int) -> None:
+        for key in self.pending_of.pop(req_id, ()):
+            if self.pending_index.get(key) == req_id:
+                del self.pending_index[key]
 
     # -- request lifecycle -------------------------------------------------
     def insert(self, req_id: int, prefill_cache: Any, row: int,
@@ -343,6 +393,9 @@ class PagedCachePool:
         return victims
 
     def release(self, req_id: int) -> None:
+        # a preempted/failed prefill must free its pending claims, or the
+        # requests waiting on it would deadlock at the queue head
+        self._clear_pending(req_id)
         lane = self.lane_of.pop(req_id)
         for b in reversed(self.blocks_of.pop(req_id)):
             self.ref[b] -= 1

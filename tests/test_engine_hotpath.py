@@ -182,6 +182,50 @@ def test_prefix_sharing_engine_streams_and_savings(tiny_model, tiny_params):
     assert shr.pool.used_blocks == 0       # everything reclaimed
 
 
+def test_pending_share_dedups_same_wave_admissions(tiny_model, tiny_params):
+    """Two requests with an identical prompt head submitted in the same
+    wave: the second waits on the first's in-flight prefill and attaches
+    to its blocks (register-at-admit), instead of both writing the head."""
+    vocab = tiny_model.cfg.vocab_size
+    rng = np.random.default_rng(3)
+    head = [int(t) for t in rng.integers(0, vocab, 24)]  # 3 full blocks @8
+    tails = [[int(t) for t in rng.integers(0, vocab, 4 + i)]
+             for i in range(3)]
+
+    def serve(prefix_share):
+        eng = _engine(tiny_model, tiny_params, max_seq=128, n_slots=4,
+                      knobs=EngineKnobs(max_batch=4),
+                      prefix_share=prefix_share, prefill_chunk=16)
+        for t in tails:                    # one wave, identical heads
+            eng.submit(Request(prompt=head + t, max_new_tokens=4))
+        stats = eng.run()
+        return eng, stats
+
+    base, st0 = serve(False)
+    shr, st1 = serve(True)
+    assert _streams(st0) == _streams(st1)
+    # the two waiters deferred admission, then attached to the 3 head
+    # blocks the first request prefilled — none of them recomputed it
+    assert shr.pool.pending_share_waits > 0
+    assert shr.pool.shared_block_hits >= 6
+    assert st1.prefill_tokens <= st0.prefill_tokens - 2 * len(head)
+    assert shr.pool.used_blocks == 0       # everything reclaimed
+    assert not shr.pool.pending_index and not shr.pool.pending_of
+
+
+def test_pending_claims_cleared_on_release(tiny_model):
+    """A preempted/failed prefill releases its pending chain-key claims so
+    waiters cannot deadlock on a dead owner."""
+    pool = PagedCachePool(tiny_model, n_lanes=3, max_seq=64, block_size=8)
+    toks = list(range(20))                 # 2 full blocks + tail
+    assert pool.admit_prefill(1, len(toks), []) is not None
+    pool.register_pending(1, toks)
+    assert pool.pending_shared(toks, have=0)
+    pool.release(1)                        # preemption path
+    assert not pool.pending_shared(toks, have=0)
+    assert not pool.pending_index and not pool.pending_of
+
+
 # ---------------------------------------------------------------------------
 # chunked prefill: interleaving + TBT non-regression
 # ---------------------------------------------------------------------------
