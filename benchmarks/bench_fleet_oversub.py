@@ -1,0 +1,132 @@
+"""Fleet oversubscription + carbon/price-aware steering benchmark.
+
+Records the two fleet-level TCO results (paper §4.4, Fig. 19/20) the
+``fleet_oversub_planner`` example demonstrates, with the drills imported
+from the example so the CI smoke and the recorded numbers can never drift
+apart:
+
+* ``planner`` — ``FleetOversubPlanner`` over the regional-UPS-failure
+  drill: per-region isolated safe ratios vs the fleet-coordinated plan.
+  The claim: the coordinated total strictly exceeds the isolated total —
+  cross-region draining converts a neighbor's headroom into admitted
+  racks.
+* ``cost`` — the coal-vs-hydro steering drill under the thermal-only
+  ``GlobalTapasRouter`` vs ``cost_aware_knobs()``: blended price/carbon
+  energy cost, energy, carbon and goodput for both.  The claim: the
+  blended cost drops while goodput stays within 1%.
+
+All metrics are deterministic simulation outcomes.  Emits
+``benchmarks/BENCH_fleet_oversub.json`` (checked in, the recorded
+trajectory).  ``--smoke`` runs one seed and asserts both claims.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+for p in (str(_ROOT), str(_ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from benchmarks.common import RESULTS  # noqa: E402
+from examples.fleet_oversub_planner import (CARBON_WEIGHT,  # noqa: E402
+                                            RATIOS, make_cost_fleet,
+                                            make_planner_fleet)
+from repro.core.fleet import GlobalTapasRouter, cost_aware_knobs  # noqa: E402
+from repro.core.oversubscribe import FleetOversubPlanner  # noqa: E402
+
+CHECKED_IN = _ROOT / "benchmarks" / "BENCH_fleet_oversub.json"
+
+
+def run_planner(seed: int) -> dict:
+    plan = FleetOversubPlanner(make_planner_fleet(seed), ratios=RATIOS).plan()
+    s = plan.summary()
+    print(f"seed={seed} planner  isolated={s['isolated_total']:.3f} "
+          f"coordinated={s['coordinated_total']:.3f} "
+          f"gain={s['gain']:+.3f} evals={s['evaluations']}")
+    return s
+
+
+def run_cost(seed: int) -> dict:
+    rows = {}
+    for label, policy in (
+            ("thermal_only", GlobalTapasRouter),
+            ("cost_aware", lambda: GlobalTapasRouter(
+                cost_aware_knobs(cost_shift_max=0.6)))):
+        res = make_cost_fleet(policy, seed=seed).run()
+        s = res.summary()
+        rows[label] = {
+            "blended_cost": res.blended_cost(CARBON_WEIGHT),
+            "energy_kwh": s["energy_kwh"],
+            "energy_cost": s["energy_cost"],
+            "carbon_kg": s["carbon_kg"],
+            "moved_load": s["moved_load"],
+            "wan_overhead": s["wan_overhead"],
+            "unserved_frac": s["unserved_frac"],
+            "mean_quality": s["mean_quality"],
+            "throttle_events": s["throttle_events"],
+        }
+        print(f"seed={seed} {label:13s} "
+              f"blended={rows[label]['blended_cost']:8.1f} "
+              f"moved={rows[label]['moved_load']:6.1f} "
+              f"unserved={rows[label]['unserved_frac']:.5f}")
+    rows["saving_frac"] = 1.0 - (rows["cost_aware"]["blended_cost"]
+                                 / rows["thermal_only"]["blended_cost"])
+    rows["goodput_ratio"] = ((1.0 - rows["cost_aware"]["unserved_frac"])
+                             / (1.0 - rows["thermal_only"]["unserved_frac"]))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one seed + assert the two fleet TCO claims")
+    ap.add_argument("--seeds", type=int, default=2)
+    args = ap.parse_args()
+
+    seeds = [0] if args.smoke else list(range(args.seeds))
+    per_seed = {seed: {"planner": run_planner(seed), "cost": run_cost(seed)}
+                for seed in seeds}
+    payload = {
+        "bench": "fleet_oversub",
+        "mode": "smoke" if args.smoke else "full",
+        "drills": {
+            "planner": "2 regions, ridge UPS failover + heat wave + surge "
+                       "hours 7-11 of 12; ratio grid "
+                       + ",".join(f"{r:.3f}" for r in RATIOS),
+            "cost": "coal (price 1.3, carbon 1.5) vs hydro (price 0.6, "
+                    "carbon 0.4), price shock x1.6 on coal hours 6-10",
+        },
+        "carbon_weight": CARBON_WEIGHT,
+        "per_seed": per_seed,
+    }
+    out = RESULTS / "BENCH_fleet_oversub.json" if args.smoke else CHECKED_IN
+    out.write_text(json.dumps(payload, indent=1) + "\n")
+    print(f"wrote {out}")
+
+    if args.smoke:
+        assert out.exists(), "BENCH_fleet_oversub.json not produced"
+        plan = per_seed[0]["planner"]
+        cost = per_seed[0]["cost"]
+        assert plan["coordinated_safe"], \
+            "the coordinated plan blew the capping budget"
+        assert plan["coordinated_total"] > plan["isolated_total"], (
+            f"fleet-coordinated planning must admit strictly more "
+            f"oversubscription than per-region planning: "
+            f"{plan['coordinated_total']} !> {plan['isolated_total']}")
+        assert cost["cost_aware"]["moved_load"] > 0.0, \
+            "cost-aware steering never engaged"
+        assert cost["saving_frac"] > 0.0, (
+            f"cost-aware steering must cut the blended energy cost: "
+            f"saving {cost['saving_frac']:.4f}")
+        assert cost["goodput_ratio"] >= 0.99, (
+            f"goodput dropped more than 1% under cost-aware steering: "
+            f"{cost['goodput_ratio']:.4f}")
+        print("smoke OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Unified bench-regression gate: one CI step for every checked-in bench.
+
+Runs every ``benchmarks/bench_*.py`` that records a committed
+``BENCH_*.json`` in ``--smoke`` mode (each smoke already asserts its own
+acceptance criteria), then compares the smoke run's key metrics against
+the checked-in trajectory within the tolerances declared below, and
+prints a one-line pass/fail table per metric.
+
+Declared gates per bench:
+
+* ``value``   — the smoke metric itself must satisfy a bound
+  (``min``/``max``/``eq``), e.g. "host-sync reduction >= 2x".
+* ``vs``      — the smoke metric must match the *recorded* metric (a
+  dotted path into the checked-in JSON) within ``tol_abs``/``tol_rel``;
+  simulation metrics are deterministic, so tolerances are tight and a
+  drift means the physics or a policy changed without re-recording.
+* ``lt_metric`` — cross-metric ordering inside the smoke payload, e.g.
+  "global router throttles strictly less than latency-only".
+
+A checked-in ``BENCH_*.json`` with no gate spec fails the run: every
+recorded benchmark must be covered here (CI acceptance criterion).
+
+    PYTHONPATH=src python scripts/check_bench.py [--skip-run]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH = ROOT / "benchmarks"
+RESULTS = BENCH / "results"
+
+#: bench name -> list of gate dicts.  ``metric`` paths index the *smoke*
+#: payload; ``vs`` paths index the checked-in payload.
+SPECS = {
+    "engine": [
+        {"metric": "streams_identical", "eq": True},
+        {"metric": "host_sync_reduction", "min": 2.0},
+        # the fused path must stay below the recorded pre-PR3 per-step
+        # baseline (smoke and full run different workload sizes, so the
+        # comparison is against the recorded *baseline*, not equality)
+        {"metric": "fused.host_syncs_per_1k_tokens",
+         "vs": "baseline.host_syncs_per_1k_tokens", "max_ratio": 0.5},
+    ],
+    "fleet": [
+        {"metric": "per_seed.0.global.throttle_events",
+         "lt_metric": "per_seed.0.latency.throttle_events"},
+        {"metric": "per_seed.0.global.moved_load", "min": 1e-9},
+        # deterministic drill: the smoke seed-0 trajectory must replay the
+        # recorded one (2-event slack for BLAS/platform jitter)
+        {"metric": "per_seed.0.global.throttle_events",
+         "vs": "per_seed.0.global.throttle_events", "tol_abs": 2},
+        {"metric": "per_seed.0.latency.throttle_events",
+         "vs": "per_seed.0.latency.throttle_events", "tol_abs": 2},
+        {"metric": "per_seed.0.global.unserved_frac",
+         "vs": "per_seed.0.global.unserved_frac", "tol_abs": 0.01},
+    ],
+    "fleet_oversub": [
+        {"metric": "per_seed.0.planner.coordinated_safe", "eq": True},
+        # the headline claims, re-asserted over the fresh smoke run
+        {"metric": "per_seed.0.planner.gain", "min": 1e-9},
+        {"metric": "per_seed.0.cost.saving_frac", "min": 1e-9},
+        {"metric": "per_seed.0.cost.goodput_ratio", "min": 0.99},
+        # deterministic planner: the plan must replay the recorded one
+        # (a grid step of slack covers platform float jitter)
+        {"metric": "per_seed.0.planner.coordinated_total",
+         "vs": "per_seed.0.planner.coordinated_total", "tol_abs": 0.125},
+        {"metric": "per_seed.0.planner.isolated_total",
+         "vs": "per_seed.0.planner.isolated_total", "tol_abs": 0.125},
+        {"metric": "per_seed.0.cost.saving_frac",
+         "vs": "per_seed.0.cost.saving_frac", "tol_abs": 0.03},
+    ],
+}
+
+
+def lookup(payload: dict, path: str):
+    cur = payload
+    for part in path.split("."):
+        if isinstance(cur, list):
+            cur = cur[int(part)]
+        else:
+            cur = cur[part]
+    return cur
+
+
+def check_gate(name: str, gate: dict, smoke: dict, recorded: dict) -> tuple:
+    """Returns (ok, one-line description)."""
+    got = lookup(smoke, gate["metric"])
+    if "eq" in gate:
+        want = gate["eq"]
+        return (got == want, f"{gate['metric']} == {want!r} (got {got!r})")
+    if "lt_metric" in gate:
+        bound = lookup(smoke, gate["lt_metric"])
+        return (got < bound,
+                f"{gate['metric']} ({got}) < {gate['lt_metric']} ({bound})")
+    if "vs" in gate:
+        ref = lookup(recorded, gate["vs"])
+        if "max_ratio" in gate:
+            bound = ref * gate["max_ratio"]
+            return (got <= bound,
+                    f"{gate['metric']} ({got:.4g}) <= "
+                    f"{gate['max_ratio']} x recorded {gate['vs']} "
+                    f"({ref:.4g})")
+        tol = gate.get("tol_abs", 0.0) + gate.get("tol_rel", 0.0) * abs(ref)
+        return (abs(got - ref) <= tol,
+                f"{gate['metric']} ({got:.4g}) == recorded ({ref:.4g}) "
+                f"+- {tol:.4g}")
+    if "min" in gate:
+        return (got >= gate["min"],
+                f"{gate['metric']} ({got:.4g}) >= {gate['min']:.4g}")
+    if "max" in gate:
+        return (got <= gate["max"],
+                f"{gate['metric']} ({got:.4g}) <= {gate['max']:.4g}")
+    raise ValueError(f"{name}: gate {gate} declares no check")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-run", action="store_true",
+                    help="gate existing smoke outputs in benchmarks/results/"
+                         " without re-running the benches")
+    ap.add_argument("--only", default="",
+                    help="comma list of bench names (default: all specs)")
+    args = ap.parse_args()
+    only = {s for s in args.only.split(",") if s}
+
+    checked_in = {p.name[len("BENCH_"):-len(".json")]
+                  for p in BENCH.glob("BENCH_*.json")}
+    uncovered = checked_in - set(SPECS)
+    if uncovered:
+        print(f"FAIL: checked-in BENCH files with no gate spec: "
+              f"{sorted(uncovered)} — declare tolerances in {__file__}")
+        return 1
+
+    failures = []
+    rows = []
+    for name in sorted(SPECS):
+        if only and name not in only:
+            continue
+        script = BENCH / f"bench_{name}.py"
+        recorded_path = BENCH / f"BENCH_{name}.json"
+        smoke_path = RESULTS / f"BENCH_{name}.json"
+        if not args.skip_run:
+            proc = subprocess.run(
+                [sys.executable, str(script), "--smoke"],
+                cwd=ROOT, capture_output=True, text=True)
+            if proc.returncode != 0:
+                rows.append((name, "smoke run", False,
+                             proc.stdout[-400:] + proc.stderr[-400:]))
+                failures.append(name)
+                continue
+            rows.append((name, "smoke run", True, "asserts passed"))
+        if not smoke_path.exists():
+            rows.append((name, "smoke output", False,
+                         f"{smoke_path} missing — run the bench with "
+                         f"--smoke first (or drop --skip-run)"))
+            failures.append(name)
+            continue
+        recorded = json.loads(recorded_path.read_text())
+        smoke = json.loads(smoke_path.read_text())
+        for gate in SPECS[name]:
+            try:
+                ok, desc = check_gate(name, gate, smoke, recorded)
+            except (KeyError, IndexError) as e:
+                ok, desc = False, f"missing metric {e!r} for gate {gate}"
+            rows.append((name, gate["metric"], ok, desc))
+            if not ok:
+                failures.append(name)
+
+    width = max(len(r[1]) for r in rows) if rows else 10
+    for name, metric, ok, desc in rows:
+        print(f"{'PASS' if ok else 'FAIL'}  {name:<14} "
+              f"{metric:<{width}}  {desc}")
+    if failures:
+        print(f"\nbench gate FAILED: {sorted(set(failures))}")
+        return 1
+    print(f"\nbench gate OK: {len(rows)} checks over "
+          f"{len(checked_in)} recorded benchmarks")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

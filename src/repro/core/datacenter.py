@@ -101,5 +101,7 @@ def scale_datacenter(cfg: DCConfig, oversub: float) -> DCConfig:
         / (cfg.racks_per_row + extra),
         airflow_headroom=cfg.airflow_headroom * cfg.racks_per_row
         / (cfg.racks_per_row + extra),
+        power_provision_frac=cfg.power_provision_frac,
+        airflow_provision_frac=cfg.airflow_provision_frac,
         ahus_per_aisle=cfg.ahus_per_aisle, region=cfg.region,
     )

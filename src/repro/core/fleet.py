@@ -48,9 +48,11 @@ from typing import Protocol, runtime_checkable
 import numpy as np
 
 from repro.core.datacenter import DCConfig
-from repro.core.risk import region_risk
+from repro.core.risk import (energy_cost_index, region_risk,
+                             thermally_comparable)
 from repro.core.scenario import Scenario, VMArrival, WeatherShift
 from repro.core.simulator import TAPAS, ClusterSim, Policy, SimConfig
+from repro.core.traces import carbon_intensity
 
 
 @dataclass(frozen=True)
@@ -67,6 +69,7 @@ class RegionSpec:
     dc: DCConfig = field(default_factory=DCConfig)
     wan_rtt_ms: float = 20.0      # RTT to the fleet's user front door
     power_price: float = 1.0      # relative $/kWh (admission preference)
+    carbon_scale: float = 1.0     # grid dirtiness vs the fleet-mean grid
     weather: tuple = ()           # WeatherShift schedule for this region
     trace_namespace: str | None = None
 
@@ -79,6 +82,9 @@ class RegionSpec:
         if self.power_price <= 0.0:
             raise ValueError(
                 f"power_price must be > 0, got {self.power_price}")
+        if self.carbon_scale <= 0.0:
+            raise ValueError(
+                f"carbon_scale must be > 0, got {self.carbon_scale}")
         object.__setattr__(self, "weather", tuple(self.weather))
         for ev in self.weather:
             if not isinstance(ev, WeatherShift):
@@ -125,9 +131,20 @@ class FleetState:
     capacity: dict                 # name -> SaaS capacity, nominal-VM units
     headroom: dict                 # name -> capacity - natural demand
     demand: dict                   # endpoint -> {name: natural demand}
+    price: dict = field(default_factory=dict)   # name -> effective $/kWh
+    #                                             (shock-scaled power_price)
+    carbon: dict = field(default_factory=dict)  # name -> grid carbon
+    #                                             intensity right now
+    wan_penalty_per_ms: float = 0.0             # the fleet's WAN tax rate
 
     def free_servers(self, name: str) -> int:
         return int((self.regions[name].kind == 0).sum())
+
+    def cost_index(self, name: str, *, carbon_weight: float = 0.5) -> float:
+        """Blended price/carbon cost of a kWh served in ``name`` now."""
+        return energy_cost_index(self.price.get(name, 1.0),
+                                 self.carbon.get(name, 1.0),
+                                 carbon_weight=carbon_weight)
 
 
 @runtime_checkable
@@ -195,6 +212,31 @@ class FleetKnobs:
     #: back, throttle, repeat.  Holding the steered fraction and releasing
     #: it slowly turns the oscillation into a ramp.
     release: float = 0.75
+    #: ceiling on the fraction of a *cool* origin's demand moved purely for
+    #: cost (price/carbon).  0.0 disables cost-aware steering — the
+    #: default, which preserves the recorded ``BENCH_fleet`` trajectory;
+    #: see ``cost_aware_knobs()`` for the enabled preset.
+    cost_shift_max: float = 0.0
+    #: a cost destination may be at most this much riskier than the origin
+    #: (and always below ``risk_threshold``): the thermal tolerance band
+    #: inside which regions count as equivalent and $/carbon may decide.
+    cost_risk_band: float = 0.15
+    #: minimum fractional cost advantage — net of the WAN goodput tax — a
+    #: destination must offer before cost-chasing engages.  Paired with
+    #: the reused ``release`` hysteresis, this keeps a marginally-cheap
+    #: region from flapping demand back and forth across the WAN.
+    cost_margin: float = 0.08
+    #: weight of grid carbon intensity vs bare power price in the blended
+    #: cost index (see ``risk.energy_cost_index``).
+    carbon_weight: float = 0.5
+
+
+def cost_aware_knobs(**overrides) -> FleetKnobs:
+    """The carbon/price-aware preset: thermal steering as recorded, plus
+    cost-chasing of up to 35% of a cool origin's demand."""
+    kw = dict(cost_shift_max=0.35)
+    kw.update(overrides)
+    return FleetKnobs(**kw)
 
 
 class GlobalTapasRouter:
@@ -209,6 +251,15 @@ class GlobalTapasRouter:
     candidate ordering ends in the region name or server id, so decisions
     are stable across Python versions and insertion orders.
 
+    With ``FleetKnobs.cost_shift_max > 0`` (see ``cost_aware_knobs()``),
+    thermally-cool origins additionally chase cheap/clean energy: demand
+    moves toward regions whose blended price/carbon index — inflated by
+    the WAN goodput tax — undercuts home by ``cost_margin``, but only
+    inside the ``cost_risk_band`` thermal tolerance band, and the moved
+    fraction reuses the same hysteresis so price flapping cannot
+    oscillate load across the WAN.  The default knobs leave cost-chasing
+    off, preserving the recorded thermal-drill trajectories.
+
     The steer-fraction memory makes the policy stateful — pass the class
     (or a factory) to ``FleetConfig(fleet=...)`` when rerunning one
     ``FleetSim``, exactly like stateful ``SimConfig.control`` policies.
@@ -217,6 +268,7 @@ class GlobalTapasRouter:
     def __init__(self, knobs: FleetKnobs | None = None):
         self.knobs = knobs or FleetKnobs()
         self._steer: dict = {}   # (endpoint, origin) -> held moved fraction
+        self._cost: dict = {}    # (endpoint, origin) -> held cost-move frac
 
     def admit_region(self, fleet: FleetState, vm: VMArrival) -> str | None:
         cands = [(fleet.risk[n], fleet.specs[n].power_price,
@@ -241,6 +293,8 @@ class GlobalTapasRouter:
                        self._steer.get(key, 0.0) * k.release)
             if move < 1e-3:
                 self._steer.pop(key, None)
+                # a thermally-cool origin is free to chase cheap energy
+                self._cost_route(fleet, endpoint, h, demands, shares)
                 continue
             dests = []
             for q in sorted(demands):
@@ -265,6 +319,80 @@ class GlobalTapasRouter:
             for q, w in dests:
                 shares[h][q] = move * w / tot
         return shares
+
+    def _cost_route(self, fleet: FleetState, endpoint: str, h: str,
+                    demands: dict, shares: dict) -> None:
+        """Carbon/price-aware steering for a thermally-cool origin ``h``.
+
+        Only engages inside the thermal tolerance band (the destination
+        must be no more than ``cost_risk_band`` riskier than the origin
+        and below the steering threshold), and only when the destination's
+        blended price/carbon index — inflated by the WAN goodput tax for
+        the extra capacity remote serving burns — undercuts the origin's
+        by at least ``cost_margin``.  The moved fraction reuses the
+        thermal hysteresis: it rises to the target immediately, and once
+        the advantage shrinks into the ``+-cost_margin`` dead band the
+        held share keeps landing on the break-even destinations while
+        decaying by ``release`` per tick — so two regions pricing within
+        noise of each other ramp demand back gradually instead of
+        flipping it across the WAN every tick.  A hard reversal (the dest
+        now costlier than home by more than the margin, or thermally
+        excluded) sends demand home immediately.
+        """
+        k = self.knobs
+        key = (endpoint, h)
+        if k.cost_shift_max <= 0.0:
+            return
+        r_h = fleet.risk[h]
+        c_h = fleet.cost_index(h, carbon_weight=k.carbon_weight)
+        # two tiers around the break-even point: a dest must undercut home
+        # by cost_margin to *engage* new steering, but a previously-engaged
+        # share keeps landing (decaying) on any dest inside the +-margin
+        # dead band — advantage hovering around the margin therefore ramps
+        # instead of flipping up to cost_shift_max of the demand per tick
+        engage, hold = [], []
+        for q in sorted(demands):
+            if q == h or fleet.rtt_ms[(h, q)] > k.rtt_budget_ms:
+                continue
+            if fleet.emergency[q] or fleet.headroom[q] <= 0.0 \
+                    or not thermally_comparable(
+                        r_h, fleet.risk[q], band=k.cost_risk_band,
+                        threshold=k.risk_threshold):
+                continue
+            wan = 1.0 + fleet.wan_penalty_per_ms * fleet.rtt_ms[(h, q)]
+            gain = 1.0 - (fleet.cost_index(q, carbon_weight=k.carbon_weight)
+                          * wan) / max(c_h, 1e-9)
+            if gain >= k.cost_margin:
+                engage.append((q, fleet.headroom[q] * gain))
+            elif gain > -k.cost_margin:
+                hold.append((q, fleet.headroom[q]
+                             * max(gain + k.cost_margin, 1e-9)))
+        held = self._cost.get(key, 0.0)
+        if engage:
+            dests, move = engage, k.cost_shift_max
+        elif hold and held >= 1e-3:
+            dests, move = hold, held * k.release
+        else:
+            # dests reversed hard (or thermally excluded): the held share
+            # decays with nowhere to land — demand returns home at once
+            held *= k.release
+            if held < 1e-3:
+                self._cost.pop(key, None)
+            else:
+                self._cost[key] = held
+            return
+        # goodput guard: never move more than the destinations' actual
+        # headroom can absorb (with margin for the WAN tax)
+        avail = 0.9 * sum(max(fleet.headroom[q], 0.0) for q, _ in dests)
+        move = min(move, avail / max(demands[h], 1e-9))
+        if move < 1e-3:
+            self._cost.pop(key, None)
+            return
+        self._cost[key] = move
+        tot = sum(w for _, w in dests)
+        shares[h][h] = 1.0 - move
+        for q, w in dests:
+            shares[h][q] = shares[h].get(q, 0.0) + move * w / tot
 
     def rebalance(self, fleet: FleetState) -> list:
         k = self.knobs
@@ -347,6 +475,16 @@ class FleetResult:
     fleet_admissions: int
     unserved_frac: float           # fleet-wide, demand-weighted
     mean_quality: float
+    energy_kwh: float = 0.0        # fleet IT energy drawn over the run
+    energy_cost: float = 0.0       # sum of kWh x effective power price
+    carbon_kg: float = 0.0         # sum of kWh x grid carbon intensity
+
+    def blended_cost(self, carbon_weight: float = 0.5) -> float:
+        """The objective cost-aware steering minimizes: served energy
+        weighted by the blended price/carbon index (see
+        ``risk.energy_cost_index``), integrated over the run."""
+        return ((1.0 - carbon_weight) * self.energy_cost
+                + carbon_weight * self.carbon_kg)
 
     def summary(self) -> dict:
         th = sum(r.thermal_events for r in self.regions.values())
@@ -364,6 +502,9 @@ class FleetResult:
             "migrations": self.migrations,
             "migrations_failed": self.migrations_failed,
             "fleet_admissions": self.fleet_admissions,
+            "energy_kwh": self.energy_kwh,
+            "energy_cost": self.energy_cost,
+            "carbon_kg": self.carbon_kg,
             "regions": {n: r.summary() for n, r in self.regions.items()},
         }
 
@@ -410,6 +551,16 @@ class FleetSim:
         self.ticks = first.ticks
         self.t_h = first.t_h
         self._fleet_vms = scenario.fleet_arrivals()
+        self._scenario = scenario      # fleet-level events (price shocks)
+        # per-region grid carbon-intensity traces, namespaced exactly like
+        # the weather/customer noise so identical configs still diverge
+        self._carbon = {}
+        for spec in cfg.regions:
+            ns = spec.name if spec.trace_namespace is None \
+                else spec.trace_namespace
+            self._carbon[spec.name] = (
+                spec.carbon_scale
+                * carbon_intensity(self.t_h, seed=cfg.seed, namespace=ns))
         self.reset()
 
     @staticmethod
@@ -454,6 +605,10 @@ class FleetSim:
         self._migrations = 0
         self._mig_failed = 0
         self._admissions = 0
+        self._energy_kwh = 0.0
+        self._energy_cost = 0.0
+        self._carbon_kg = 0.0
+        self._prev_energy = dict.fromkeys(self.sims, 0.0)
         # migrations whose dest placement has not been confirmed yet:
         # (dst, src, injected VMSpec), resolved after the next observe
         self._inflight: list = []
@@ -495,11 +650,16 @@ class FleetSim:
                 demand.setdefault(ep, {})[name] = d
                 natural[name] += float(d)
         headroom = {n: capacity[n] - natural[n] for n in states}
+        now = float(self.t_h[self.tick])
+        price = {n: self.specs[n].power_price
+                 * self._scenario.price_scale(now, n) for n in states}
+        carbon = {n: float(self._carbon[n][self.tick]) for n in states}
         return FleetState(
-            tick=self.tick, now_h=float(self.t_h[self.tick]),
+            tick=self.tick, now_h=now,
             regions=states, specs=self.specs, rtt_ms=self.rtt_ms,
             risk=risk, emergency=emergency, capacity=capacity,
-            headroom=headroom, demand=demand)
+            headroom=headroom, demand=demand, price=price, carbon=carbon,
+            wan_penalty_per_ms=self.cfg.wan_penalty_per_ms)
 
     def _apply_shares(self, ep: str, demands: dict, shares: dict,
                       overrides: dict) -> None:
@@ -607,6 +767,14 @@ class FleetSim:
         for name, sim in self.sims.items():
             sim.route(states[name], demand_overrides=overrides[name])
             sim.finish_tick(states[name])
+        # energy/cost accounting: this tick's per-region energy priced at
+        # this tick's effective power price and grid carbon intensity
+        for name, sim in self.sims.items():
+            kwh = sim._energy_kwh - self._prev_energy[name]
+            self._prev_energy[name] = sim._energy_kwh
+            self._energy_kwh += kwh
+            self._energy_cost += kwh * fleet.price[name]
+            self._carbon_kg += kwh * fleet.carbon[name]
         self.tick += 1
         self.last_state = fleet
         return fleet
@@ -627,7 +795,9 @@ class FleetSim:
             migrations_failed=self._mig_failed,
             fleet_admissions=self._admissions,
             unserved_frac=unserved / max(demand, 1e-9),
-            mean_quality=q_acc / max(q_w, 1e-9))
+            mean_quality=q_acc / max(q_w, 1e-9),
+            energy_kwh=self._energy_kwh, energy_cost=self._energy_cost,
+            carbon_kg=self._carbon_kg)
 
     def run(self) -> FleetResult:
         if self.tick:

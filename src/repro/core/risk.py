@@ -116,6 +116,35 @@ def server_risk(dc: Datacenter, thermal: ThermalModel, power: PowerModel, *,
     return np.maximum.reduce([t_risk, p_risk, a_risk])
 
 
+def energy_cost_index(price: float, carbon: float, *,
+                      carbon_weight: float = 0.5) -> float:
+    """One scalar "how expensive is a kWh served here right now".
+
+    Blends the region's effective power price (relative $/kWh, shocks
+    applied) with its instantaneous grid carbon intensity (relative,
+    1.0 == fleet mean) — both ~1.0-centered, so the blend stays comparable
+    across weights.  ``carbon_weight`` 0 prices money only, 1 prices
+    carbon only.  The fleet router minimizes this index when regions are
+    thermally equivalent; the fleet accounting integrates it over served
+    energy.
+    """
+    if not 0.0 <= carbon_weight <= 1.0:
+        raise ValueError(
+            f"carbon_weight must be in [0, 1], got {carbon_weight}")
+    return (1.0 - carbon_weight) * price + carbon_weight * carbon
+
+
+def thermally_comparable(risk_origin: float, risk_dest: float, *,
+                         band: float, threshold: float) -> bool:
+    """True when steering load origin -> dest is thermally a wash: the
+    destination sits below the steering ``threshold`` and is no more than
+    ``band`` riskier than the origin.  Cost-chasing is only allowed inside
+    this band — outside it, thermal steering (cooler regions only) owns
+    the decision."""
+    return (risk_dest < threshold
+            and risk_dest - risk_origin <= band)
+
+
 def region_risk(risk: np.ndarray, kind: np.ndarray, *,
                 quantile: float = 0.8) -> float:
     """Lift per-server violation risk to one regional score in [0, 1].

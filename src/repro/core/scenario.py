@@ -2,7 +2,7 @@
 
 A ``Scenario`` is an ordered bag of typed events that perturb a simulation
 run: infrastructure failures (paper §5.4), extra VM arrivals, endpoint
-demand surges, and weather/region shifts.  Every event validates its fields
+demand surges, weather/region shifts, and power-price shocks.  Every event validates its fields
 at construction — a typo'd ``kind="upss"`` raises immediately instead of
 being silently ignored mid-drill — and ``failures.py``, ``oversubscribe.py``
 and the benchmarks all script their runs through this one API instead of
@@ -140,7 +140,34 @@ class VMArrival:
                 f"peak_util must be in (0, 1], got {self.peak_util}")
 
 
-_EVENT_TYPES = (FailureEvent, DemandSurge, WeatherShift, VMArrival)
+@dataclass(frozen=True)
+class PriceShock:
+    """Multiply a region's effective power price for a window.
+
+    A spot-market spike, a demand-response curtailment price, or a grid
+    event folded into $/kWh.  Price is fleet-level economics — the event
+    is consumed by ``FleetSim`` (steering/accounting), never by a region's
+    ``ClusterSim`` (clusters have no price concept), so ``for_region``
+    filters it out of the per-region scenario slices.
+    """
+    start_h: float
+    end_h: float
+    scale: float                  # multiplier on power_price (> 0)
+    region: str | None = None     # None == every region
+
+    def __post_init__(self):
+        _check_window(self.start_h, self.end_h)
+        _check_region(self.region)
+        if self.scale <= 0.0:
+            raise ValueError(
+                f"price shock scale must be > 0, got {self.scale}")
+
+    def active(self, now_h: float) -> bool:
+        return self.start_h <= now_h < self.end_h
+
+
+_EVENT_TYPES = (FailureEvent, DemandSurge, WeatherShift, VMArrival,
+                PriceShock)
 
 
 @dataclass(frozen=True)
@@ -185,6 +212,16 @@ class Scenario:
     def vm_arrivals(self) -> list:
         return [ev for ev in self.events if isinstance(ev, VMArrival)]
 
+    def price_scale(self, now_h: float, region: str | None = None) -> float:
+        """Combined power-price multiplier for ``region`` at ``now_h``
+        (untagged shocks hit every region)."""
+        scale = 1.0
+        for ev in self.events:
+            if (isinstance(ev, PriceShock) and ev.active(now_h)
+                    and ev.region in (None, region)):
+                scale *= ev.scale
+        return scale
+
     # -- fleet accessors ---------------------------------------------------
     def regions_named(self) -> set:
         """Every region name any event is scoped to (for validation)."""
@@ -203,6 +240,8 @@ class Scenario:
         for ev in self.events:
             if isinstance(ev, VMArrival) and ev.region is None:
                 continue
+            if isinstance(ev, PriceShock):
+                continue          # fleet-level economics, never a cluster's
             if ev.region in (None, name):
                 out.append(replace(ev, region=None))
         return Scenario(tuple(out))

@@ -47,7 +47,8 @@ from repro.core.datacenter import Datacenter, DCConfig
 from repro.core.power import PowerModel, capping_factors
 from repro.core.risk import server_risk
 from repro.core.router import BaselineRouter, RoutingPolicy, TapasRouter
-from repro.core.scenario import Scenario, WeatherShift, as_scenario
+from repro.core.scenario import (PriceShock, Scenario, WeatherShift,
+                                 as_scenario)
 # legacy re-exports: FailureEvent and friends used to live in this module
 from repro.core.scenario import DemandSurge, FailureEvent, VMArrival  # noqa: F401,E501
 from repro.core.state import ClusterState, ControlPolicy, InstanceView
@@ -118,9 +119,11 @@ class SimResult:
     iaas_perf_impact: float          # mean freq-cap depth x affected frac
     saas_perf_impact: float
     row_power_frac: np.ndarray       # (T, R)
+    energy_kwh: float = 0.0          # IT energy drawn over the run
 
     def summary(self) -> dict:
         return {
+            "energy_kwh": self.energy_kwh,
             "max_temp_c": float(self.max_gpu_temp.max()),
             "p99_temp_c": float(np.quantile(self.max_gpu_temp, 0.99)),
             "peak_row_power_frac": float(self.peak_row_power_frac.max()),
@@ -209,6 +212,11 @@ class ClusterSim:
                     f"event {ev!r} is scoped to region {ev.region!r}, but "
                     f"this is a single-cluster sim — region-tagged events "
                     f"need core.fleet.FleetSim (or drop the tag)")
+            if isinstance(ev, PriceShock):
+                raise ValueError(
+                    f"event {ev!r} is fleet-level economics; a single "
+                    f"cluster has no power price — price shocks need "
+                    f"core.fleet.FleetSim")
             if (isinstance(ev, FailureEvent) and ev.kind in ("ahu", "thermal")
                     and ev.target >= self.dc.n_aisles):
                 raise ValueError(
@@ -290,6 +298,7 @@ class ClusterSim:
         self._th_events = self._pw_events = 0
         self._th_capped = self._pw_capped = 0
         self._occupied_acc = 0
+        self._energy_kwh = 0.0
         self._unserved_total = self._demand_total = 0.0
         self._quality_acc = self._quality_w = 0.0
         self._iaas_impact = self._saas_impact = 0.0
@@ -545,6 +554,10 @@ class ClusterSim:
         self._saas_impact += (float(cap_depth[saas_mask].mean())
                               if saas_mask.any() else 0.0)
 
+        # served energy this tick (post-throttle/post-capping power draw)
+        self._energy_kwh += (float(power_s.sum()) * cfg.tick_min / 60.0
+                             / 1000.0)
+
         rowf = p_row / np.maximum(dc.prov_row_power_w, 1.0)
         self._row_frac_t[ti] = rowf
         self._peak_row[ti] = float(rowf.max())
@@ -672,6 +685,7 @@ class ClusterSim:
             iaas_perf_impact=self._iaas_impact / done,
             saas_perf_impact=self._saas_impact / done,
             row_power_frac=self._row_frac_t[:self.tick],
+            energy_kwh=self._energy_kwh,
         )
 
     def run(self) -> SimResult:

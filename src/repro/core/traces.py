@@ -141,6 +141,35 @@ def endpoint_load(name: str, t_h: np.ndarray, *, seed: int = 0) -> np.ndarray:
     return np.clip(base + spikes + noise, 0.05, 1.0)
 
 
+def carbon_intensity(t_h: np.ndarray, *, seed: int = 0,
+                     namespace: str = "") -> np.ndarray:
+    """Relative grid carbon intensity over time (1.0 == fleet-mean grid).
+
+    Diurnal shape of a mixed solar/fossil grid: intensity dips through the
+    midday solar window and peaks into the evening ramp, with a small
+    seeded wobble.  ``namespace`` is the region's trace namespace (see
+    ``trace_seed``) so two regions of a fleet never replay an identical
+    grid — phases, solar depth and evening ramp all differ per region —
+    while the trace stays deterministic per (seed, namespace).  Values are
+    clipped to [0.3, 1.8]; multiply by a region's ``carbon_scale`` for the
+    absolute dirtiness of its grid.
+    """
+    t_h = np.asarray(t_h, dtype=float)
+    rng = np.random.default_rng(_stable_seed("carbon", namespace, seed))
+    solar_mid = rng.uniform(12.0, 14.0)     # center of the solar dip
+    solar_depth = rng.uniform(0.25, 0.45)
+    evening_peak = rng.uniform(17.5, 20.5)
+    evening_gain = rng.uniform(0.15, 0.35)
+    # half-cosine windows: a 8h solar dip and a 6h evening fossil ramp
+    solar = np.cos(np.clip((t_h % 24.0 - solar_mid) / 4.0, -1.0, 1.0)
+                   * np.pi / 2.0)
+    evening = np.cos(np.clip((t_h % 24.0 - evening_peak) / 3.0, -1.0, 1.0)
+                     * np.pi / 2.0)
+    wobble = 0.03 * np.sin(2 * np.pi * (t_h - rng.uniform(0, 24)) / 24.0)
+    out = 1.0 - solar_depth * solar + evening_gain * evening + wobble
+    return np.clip(out, 0.3, 1.8)
+
+
 def predict_peak_util(vm: VMSpec, *, history_h: float = 168.0,
                       seed: int = 0, quantile: float = 0.99) -> float:
     """Template-based peak prediction (paper §4.1/§4.5: previous-week P99;

@@ -78,6 +78,7 @@ def _assert_summary(got: dict, want: dict) -> None:
         assert float(got[key]) == pytest.approx(ref, rel=1e-9, abs=1e-12), key
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name,policy", [("baseline", BASELINE),
                                          ("tapas", TAPAS)])
 def test_parity_with_prerefactor_run(name, policy):
@@ -93,6 +94,7 @@ def test_parity_with_failure_scenario():
     _assert_summary(res.summary(), GOLDEN_UPS)
 
 
+@pytest.mark.slow
 def test_stepwise_drive_equals_run():
     """Externally driving step() tick-by-tick == run(), and reset() makes
     a second run deterministic."""
@@ -248,6 +250,7 @@ def test_scenario_accessors_and_composition():
     assert len(both.failures(1.5)) == 2
 
 
+@pytest.mark.slow
 def test_scenario_events_shape_the_run():
     dc = DCConfig(n_rows=2, racks_per_row=3, servers_per_rack=2)
     kw = dict(dc=dc, horizon_h=4.0, tick_min=10.0, seed=4, policy=BASELINE,
@@ -305,6 +308,7 @@ def smoke_engine():
     return eng
 
 
+@pytest.mark.slow
 def test_set_variant_requeues_in_flight(smoke_engine):
     from repro.serving import Request
     eng = smoke_engine
@@ -328,6 +332,7 @@ def test_set_variant_requeues_in_flight(smoke_engine):
         assert len(r.output) == 6  # full budget despite the swap
 
 
+@pytest.mark.slow
 def test_engine_backend_maps_config_to_knobs(smoke_engine):
     from repro.core.profiles import ConfigPoint
     from repro.serving import EngineBackend

@@ -12,6 +12,9 @@ from repro.configs import get_config
 from repro.models import build_model, local_plan
 from repro.serving import Engine, EngineKnobs, PagedCachePool, Request
 
+# whole-module: every test drives a live jitted engine (CI sim job)
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def tiny_model():
@@ -301,9 +304,16 @@ def test_chunked_prefill_tbt_non_regression(tiny_model, tiny_params):
                 break
         return max(np.diff(stamps)) if len(stamps) > 2 else 0.0
 
-    monolithic = worst_gap(None)
-    chunked = worst_gap(32)
-    assert chunked <= monolithic * 1.5
+    # wall-clock comparison: a background stall (GC, a noisy CI neighbor)
+    # during either pass flips the verdict, so retry a bounded number of
+    # times and pass on the first clean measurement
+    for attempt in range(3):
+        monolithic = worst_gap(None)
+        chunked = worst_gap(32)
+        if chunked <= monolithic * 1.5:
+            break
+    assert chunked <= monolithic * 1.5, \
+        f"after {attempt + 1} attempts: {chunked} !<= 1.5 * {monolithic}"
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,9 @@ from repro.core.simulator import BASELINE, TAPAS, ClusterSim, SimConfig
 from repro.core.traces import trace_seed
 from test_control_plane import GOLDEN, PARITY_KW, _assert_summary
 
+# whole-module: multi-region FleetSim drills (CI sim job)
+pytestmark = pytest.mark.slow
+
 SMALL = DCConfig(n_rows=2, racks_per_row=3, servers_per_rack=2)
 
 

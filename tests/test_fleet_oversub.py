@@ -1,0 +1,331 @@
+"""Fleet oversubscription planning + carbon/price-aware steering:
+``max_safe_oversubscription`` edge cases, carbon/cost trace helpers,
+``PriceShock`` scenario plumbing, the router's cost-chasing path, fleet
+energy accounting, and ``FleetOversubPlanner`` determinism."""
+import numpy as np
+import pytest
+
+from repro.core.datacenter import DCConfig
+from repro.core.fleet import (FleetConfig, FleetSim, FleetState,
+                              GlobalTapasRouter, RegionSpec,
+                              cost_aware_knobs)
+from repro.core.oversubscribe import (FleetOversubPlanner,
+                                      max_safe_oversubscription)
+from repro.core.risk import energy_cost_index, thermally_comparable
+from repro.core.scenario import FailureEvent, PriceShock, Scenario
+from repro.core.simulator import TAPAS, ClusterSim, SimConfig
+from repro.core.traces import carbon_intensity
+
+
+def _row(ratio, policy="p", thermal_pct=0.0, power_pct=0.0):
+    return {"oversub": ratio, "policy": policy,
+            "thermal_capped_pct": thermal_pct, "power_capped_pct": power_pct,
+            "unserved_pct": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# max_safe_oversubscription edge cases
+# ---------------------------------------------------------------------------
+
+def test_max_safe_empty_sweep():
+    assert max_safe_oversubscription([], "p") == 0.0
+    # rows exist but none for the requested policy
+    assert max_safe_oversubscription([_row(0.2, "other")], "p") == 0.0
+
+
+def test_max_safe_single_point():
+    assert max_safe_oversubscription([_row(0.3)], "p") == 0.3
+    assert max_safe_oversubscription([_row(0.3, thermal_pct=5.0)], "p") == 0.0
+
+
+def test_max_safe_all_points_unsafe():
+    rows = [_row(r, power_pct=10.0) for r in (0.0, 0.2, 0.4)]
+    assert max_safe_oversubscription(rows, "p") == 0.0
+
+
+def test_max_safe_non_monotone_rows_stay_contiguous():
+    """A failing middle point caps the answer even when a higher ratio
+    happens to look safe again — the sweep is walked in ratio order, not
+    cherry-picked."""
+    rows = [_row(0.0), _row(0.2, thermal_pct=5.0), _row(0.4)]
+    assert max_safe_oversubscription(rows, "p") == 0.0
+    rows = [_row(0.0), _row(0.1), _row(0.2, thermal_pct=5.0), _row(0.4)]
+    assert max_safe_oversubscription(rows, "p") == 0.1
+    # row order in the list is irrelevant (sorted internally)
+    assert max_safe_oversubscription(rows[::-1], "p") == 0.1
+
+
+def test_max_safe_budget_boundary_inclusive():
+    # capped exactly at the budget is safe (<= semantics)
+    rows = [_row(0.0), _row(0.2, thermal_pct=0.7)]
+    assert max_safe_oversubscription(rows, "p", cap_budget=0.007) == 0.2
+
+
+# ---------------------------------------------------------------------------
+# carbon trace + cost helpers
+# ---------------------------------------------------------------------------
+
+def test_carbon_intensity_deterministic_and_bounded():
+    t = np.arange(0, 48, 0.25)
+    a = carbon_intensity(t, seed=3, namespace="east")
+    b = carbon_intensity(t, seed=3, namespace="east")
+    assert np.array_equal(a, b)
+    assert (a >= 0.3).all() and (a <= 1.8).all()
+    assert a.std() > 0.05          # genuinely diurnal, not flat
+
+
+def test_carbon_intensity_namespaced():
+    t = np.arange(0, 24, 0.5)
+    east = carbon_intensity(t, seed=3, namespace="east")
+    west = carbon_intensity(t, seed=3, namespace="west")
+    assert not np.allclose(east, west)
+    other_seed = carbon_intensity(t, seed=4, namespace="east")
+    assert not np.allclose(east, other_seed)
+
+
+def test_energy_cost_index_blend():
+    assert energy_cost_index(2.0, 0.5, carbon_weight=0.0) == 2.0
+    assert energy_cost_index(2.0, 0.5, carbon_weight=1.0) == 0.5
+    assert energy_cost_index(2.0, 0.5, carbon_weight=0.5) == 1.25
+    with pytest.raises(ValueError, match="carbon_weight"):
+        energy_cost_index(1.0, 1.0, carbon_weight=1.5)
+
+
+def test_thermally_comparable_band():
+    assert thermally_comparable(0.2, 0.3, band=0.15, threshold=0.45)
+    assert not thermally_comparable(0.2, 0.4, band=0.15, threshold=0.45)
+    assert not thermally_comparable(0.5, 0.46, band=0.15, threshold=0.45)
+    # a cooler destination is always inside the band
+    assert thermally_comparable(0.4, 0.1, band=0.15, threshold=0.45)
+
+
+# ---------------------------------------------------------------------------
+# PriceShock scenario plumbing
+# ---------------------------------------------------------------------------
+
+def test_price_shock_validation():
+    with pytest.raises(ValueError, match="scale"):
+        PriceShock(start_h=0.0, end_h=1.0, scale=0.0)
+    with pytest.raises(ValueError, match="inverted"):
+        PriceShock(start_h=2.0, end_h=1.0, scale=1.5)
+    with pytest.raises(ValueError, match="region"):
+        PriceShock(start_h=0.0, end_h=1.0, scale=1.5, region="")
+
+
+def test_price_scale_accessor_and_region_scoping():
+    scen = Scenario((
+        PriceShock(start_h=1.0, end_h=3.0, scale=2.0, region="east"),
+        PriceShock(start_h=2.0, end_h=4.0, scale=1.5),      # fleet-wide
+    ))
+    assert scen.price_scale(0.5, "east") == 1.0
+    assert scen.price_scale(1.5, "east") == 2.0
+    assert scen.price_scale(2.5, "east") == 3.0             # compounds
+    assert scen.price_scale(2.5, "west") == 1.5
+    assert scen.price_scale(3.5, "east") == 1.5
+
+
+def test_price_shock_never_reaches_clusters():
+    scen = Scenario((
+        PriceShock(start_h=0.0, end_h=1.0, scale=2.0, region="east"),
+        FailureEvent(kind="cooling", start_h=0.0, end_h=1.0, region="east"),
+    ))
+    east = scen.for_region("east")
+    assert {type(ev).__name__ for ev in east.events} == {"FailureEvent"}
+    # and a single-cluster sim rejects one outright
+    with pytest.raises(ValueError, match="fleet-level"):
+        ClusterSim(SimConfig(
+            dc=DCConfig(n_rows=2, racks_per_row=3, servers_per_rack=2),
+            scenario=Scenario((PriceShock(start_h=0.0, end_h=1.0,
+                                          scale=2.0),))))
+
+
+# ---------------------------------------------------------------------------
+# cost-chasing route path (synthetic FleetState, no simulation)
+# ---------------------------------------------------------------------------
+
+def _fleet_state(risk, price, carbon, headroom, *, rtt=10.0, pen=0.002,
+                 emergency=()):
+    names = sorted(risk)
+    return FleetState(
+        tick=0, now_h=0.0, regions=dict.fromkeys(names), specs={},
+        rtt_ms={(a, b): (0.0 if a == b else rtt)
+                for a in names for b in names},
+        risk=risk, emergency={n: n in emergency for n in names},
+        capacity=dict.fromkeys(names, 10.0), headroom=headroom,
+        demand={}, price=price, carbon=carbon, wan_penalty_per_ms=pen)
+
+
+def test_cost_steering_moves_toward_cheap_clean_region():
+    fleet = _fleet_state(
+        risk={"coal": 0.15, "hydro": 0.2},
+        price={"coal": 1.4, "hydro": 0.6},
+        carbon={"coal": 1.4, "hydro": 0.5},
+        headroom={"coal": 1.0, "hydro": 6.0})
+    router = GlobalTapasRouter(cost_aware_knobs())
+    shares = router.route_region(fleet, "ep", {"coal": 4.0, "hydro": 1.0})
+    assert shares["coal"]["hydro"] > 0.0
+    assert shares["coal"]["coal"] == pytest.approx(
+        1.0 - shares["coal"]["hydro"])
+    # the cheap region keeps its own demand home
+    assert shares["hydro"] == {"hydro": 1.0}
+    # default knobs leave cost-chasing off entirely
+    default = GlobalTapasRouter()
+    assert default.route_region(fleet, "ep", {"coal": 4.0, "hydro": 1.0}) \
+        == {"coal": {"coal": 1.0}, "hydro": {"hydro": 1.0}}
+
+
+def test_cost_steering_respects_thermal_band_and_emergency():
+    hot_dest = _fleet_state(
+        risk={"coal": 0.1, "hydro": 0.35},      # 0.25 riskier > band 0.15
+        price={"coal": 1.4, "hydro": 0.6},
+        carbon={"coal": 1.4, "hydro": 0.5},
+        headroom={"coal": 1.0, "hydro": 6.0})
+    router = GlobalTapasRouter(cost_aware_knobs())
+    shares = router.route_region(hot_dest, "ep", {"coal": 4.0, "hydro": 1.0})
+    assert shares["coal"] == {"coal": 1.0}
+    emergency_dest = _fleet_state(
+        risk={"coal": 0.15, "hydro": 0.2},
+        price={"coal": 1.4, "hydro": 0.6},
+        carbon={"coal": 1.4, "hydro": 0.5},
+        headroom={"coal": 1.0, "hydro": 6.0}, emergency=("hydro",))
+    shares = GlobalTapasRouter(cost_aware_knobs()).route_region(
+        emergency_dest, "ep", {"coal": 4.0, "hydro": 1.0})
+    assert shares["coal"] == {"coal": 1.0}
+
+
+def test_cost_steering_hysteresis_releases_slowly():
+    """When the price advantage shrinks into the +-margin dead band, the
+    steered share keeps landing on the break-even dest and *ramps* home
+    (decaying each tick); a hard reversal snaps home immediately."""
+    cheap = dict(price={"coal": 1.4, "hydro": 0.6},
+                 carbon={"coal": 1.4, "hydro": 0.5})
+    # hydro barely cheaper: inside the dead band (gain ~1% < margin 8%)
+    meh = dict(price={"coal": 1.0, "hydro": 0.97},
+               carbon={"coal": 1.0, "hydro": 0.97})
+    # hydro now far costlier: a hard reversal
+    reversed_ = dict(price={"coal": 1.0, "hydro": 1.5},
+                     carbon={"coal": 1.0, "hydro": 1.5})
+    risk = {"coal": 0.15, "hydro": 0.2}
+    head = {"coal": 1.0, "hydro": 6.0}
+    demands = {"coal": 4.0, "hydro": 1.0}
+    router = GlobalTapasRouter(cost_aware_knobs())
+    engaged = router.route_region(
+        _fleet_state(risk=risk, headroom=head, **cheap), "ep", demands)
+    moved = engaged["coal"]["hydro"]
+    assert moved > 0.0
+    # advantage gone (dead band): the share still lands, decaying
+    for _ in range(3):
+        shares = router.route_region(
+            _fleet_state(risk=risk, headroom=head, **meh), "ep", demands)
+        now = shares["coal"].get("hydro", 0.0)
+        assert 0.0 < now < moved        # ramps, never snaps
+        moved = now
+    for _ in range(30):
+        router.route_region(
+            _fleet_state(risk=risk, headroom=head, **meh), "ep", demands)
+    assert ("ep", "coal") not in router._cost
+    # hard reversal: demand returns home at once
+    router.route_region(_fleet_state(risk=risk, headroom=head, **cheap),
+                        "ep", demands)
+    shares = router.route_region(
+        _fleet_state(risk=risk, headroom=head, **reversed_), "ep", demands)
+    assert shares["coal"] == {"coal": 1.0}
+
+
+def test_cost_steering_capped_by_destination_headroom():
+    fleet = _fleet_state(
+        risk={"coal": 0.15, "hydro": 0.2},
+        price={"coal": 1.4, "hydro": 0.6},
+        carbon={"coal": 1.4, "hydro": 0.5},
+        headroom={"coal": 1.0, "hydro": 0.8})
+    router = GlobalTapasRouter(cost_aware_knobs(cost_shift_max=0.9))
+    shares = router.route_region(fleet, "ep", {"coal": 10.0, "hydro": 1.0})
+    moved = shares["coal"]["hydro"] * 10.0
+    assert moved <= 0.9 * 0.8 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# fleet energy accounting + planner (simulation-backed)
+# ---------------------------------------------------------------------------
+
+SMALL = DCConfig(n_rows=2, racks_per_row=4, servers_per_rack=1)
+
+
+def _tiny_cfg(scenario=None, price=2.0, **kw):
+    return FleetConfig(
+        regions=(RegionSpec("solo", dc=SMALL, power_price=price),),
+        horizon_h=4.0, tick_min=30.0, seed=0, policy=TAPAS,
+        scenario=scenario, **kw)
+
+
+@pytest.mark.slow
+def test_fleet_energy_accounting_consistent():
+    res = FleetSim(_tiny_cfg()).run()
+    assert res.energy_kwh > 0.0
+    assert res.energy_kwh == pytest.approx(
+        sum(r.energy_kwh for r in res.regions.values()), rel=1e-9)
+    # constant price, no shocks: cost is exactly price x energy
+    assert res.energy_cost == pytest.approx(2.0 * res.energy_kwh, rel=1e-9)
+    # carbon integrates the bounded intensity trace
+    assert 0.3 * res.energy_kwh <= res.carbon_kg <= 1.8 * res.energy_kwh
+    assert res.blended_cost(0.0) == pytest.approx(res.energy_cost)
+    assert res.blended_cost(1.0) == pytest.approx(res.carbon_kg)
+
+
+@pytest.mark.slow
+def test_price_shock_raises_cost_not_energy():
+    shock = Scenario((PriceShock(start_h=1.0, end_h=3.0, scale=3.0),))
+    calm = FleetSim(_tiny_cfg()).run()
+    shocked = FleetSim(_tiny_cfg(scenario=shock)).run()
+    # prices never touch the physics...
+    assert shocked.energy_kwh == pytest.approx(calm.energy_kwh, rel=1e-9)
+    # ...but the bill integrates the spike
+    assert shocked.energy_cost > calm.energy_cost
+
+
+def test_planner_validates_inputs():
+    with pytest.raises(TypeError, match="FleetConfig"):
+        FleetOversubPlanner(SimConfig())
+    with pytest.raises(ValueError, match="region"):
+        FleetOversubPlanner(FleetConfig(regions=()))
+    with pytest.raises(ValueError, match="ratio grid"):
+        FleetOversubPlanner(_tiny_cfg(), ratios=())
+    with pytest.raises(ValueError, match="cap_budget"):
+        FleetOversubPlanner(_tiny_cfg(), cap_budget=0.0)
+
+
+@pytest.mark.slow
+def test_planner_grid_without_zero_and_unsafe_floor():
+    """A grid that omits 0.0 must not crash when even its first ratio is
+    unsafe (the 0.0 floor from max_safe_oversubscription is not a grid
+    point): the coordinated plan snaps to the grid floor and reports
+    itself unsafe."""
+    starved = DCConfig(n_rows=2, racks_per_row=4, servers_per_rack=1,
+                       power_provision_frac=0.25)
+    cfg = FleetConfig(
+        regions=(RegionSpec("solo", dc=starved),),
+        horizon_h=4.0, tick_min=30.0, seed=0, policy=TAPAS, occupancy=0.95,
+        demand_scale=1.0)
+    plan = FleetOversubPlanner(cfg, ratios=(0.25, 0.5)).plan()
+    assert plan.isolated["solo"] == 0.0        # the max_safe floor
+    assert plan.coordinated["solo"] == 0.25    # snapped onto the grid
+    assert not plan.coordinated_safe
+
+
+@pytest.mark.slow
+def test_planner_same_seed_identical_plan():
+    def mk():
+        regions = (RegionSpec("east", dc=SMALL, wan_rtt_ms=10.0),
+                   RegionSpec("west", dc=SMALL, wan_rtt_ms=20.0))
+        return FleetConfig(regions=regions, horizon_h=4.0, tick_min=30.0,
+                           seed=5, policy=TAPAS, occupancy=0.9)
+
+    plans = [FleetOversubPlanner(mk(), ratios=(0.0, 0.25)).plan()
+             for _ in range(2)]
+    assert plans[0].summary() == plans[1].summary()
+    assert plans[0].rows == plans[1].rows
+    assert plans[0].trials == plans[1].trials
+    # grid membership: every planned ratio is a grid point
+    for plan in plans:
+        assert set(plan.isolated.values()) <= {0.0, 0.25}
+        assert set(plan.coordinated.values()) <= {0.0, 0.25}

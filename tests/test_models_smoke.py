@@ -11,6 +11,9 @@ from repro.models import build_model, local_plan
 from repro.training.optimizer import AdamWConfig
 from repro.training.train_step import init_opt_state, make_train_step
 
+# whole-module: every test builds+jits a model (CI sim job)
+pytestmark = pytest.mark.slow
+
 ARCHS = ASSIGNED + ["llama2-7b"]
 
 

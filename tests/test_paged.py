@@ -10,6 +10,9 @@ from repro.kernels import ops, ref
 from repro.models import build_model, local_plan
 from repro.serving import Engine, EngineKnobs, PagedCachePool, Request
 
+# whole-module: kernel sweeps + live engines (CI sim job)
+pytestmark = pytest.mark.slow
+
 
 def arr(rng, *s, dtype=jnp.float32):
     return jnp.asarray(rng.standard_normal(s), dtype)

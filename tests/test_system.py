@@ -15,6 +15,9 @@ from repro.training.data import DataConfig, TokenPipeline
 from repro.training.optimizer import AdamWConfig
 from repro.training.train_step import init_opt_state, make_train_step
 
+# whole-module: end-to-end training/serving runs (CI sim job)
+pytestmark = pytest.mark.slow
+
 
 def test_training_reduces_loss():
     from repro.launch.train import main
