@@ -45,6 +45,12 @@ SPECS = {
         # comparison is against the recorded *baseline*, not equality)
         {"metric": "fused.host_syncs_per_1k_tokens",
          "vs": "baseline.host_syncs_per_1k_tokens", "max_ratio": 0.5},
+        # speculative decode: real end-to-end win over the horizon-only
+        # fused path at bit-identical greedy streams, and each readback
+        # must amortise a healthy run of free (accepted-draft) tokens
+        {"metric": "spec_speedup", "min": 1.5},
+        {"metric": "spec.accepted_tokens_per_sync", "min": 10.0},
+        {"metric": "spec.acceptance_rate", "min": 0.3},
     ],
     "fleet": [
         {"metric": "per_seed.0.global.throttle_events",

@@ -15,6 +15,8 @@ from repro.configs import (  # noqa: F401
     qwen3_moe_235b,
     rwkv6_3b,
 )
+from repro.configs.drafters import (DRAFT_PAIRS, check_draft_pair,
+                                    drafter_for)
 from repro.configs.shapes import SHAPES, Shape, input_specs, runnable_cells
 
 ASSIGNED = [
@@ -33,4 +35,5 @@ ASSIGNED = [
 __all__ = [
     "ArchConfig", "get_config", "list_archs", "register",
     "SHAPES", "Shape", "input_specs", "runnable_cells", "ASSIGNED",
+    "DRAFT_PAIRS", "check_draft_pair", "drafter_for",
 ]

@@ -18,6 +18,8 @@ from repro.kernels.paged_decode_attention import \
     paged_decode_attention as _paged_decode
 from repro.kernels.paged_decode_attention import \
     paged_prefill_attention as _paged_prefill
+from repro.kernels.paged_decode_attention import \
+    paged_verify_attention as _paged_verify
 from repro.kernels.rwkv6_wkv import rwkv6_wkv as _wkv
 
 
@@ -60,6 +62,16 @@ def paged_prefill_attention(q, k_pool, v_pool, block_tables, starts, *,
                           interpret=interpret)
 
 
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_verify_attention(q, k_pool, v_pool, block_tables, positions, *,
+                           interpret=None):
+    """Verify K+1 query positions per lane in one paged-attention pass."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _paged_verify(q, k_pool, v_pool, block_tables, positions,
+                         interpret=interpret)
+
+
 @partial(jax.jit, static_argnames=("block_t", "interpret"))
 def rwkv6_wkv(r, k, v, w, u, s0, *, block_t=64, interpret=None):
     if interpret is None:
@@ -85,5 +97,6 @@ def int8_matmul(x_q, w_q, sx, sw, *, interpret=None):
 
 
 __all__ = ["flash_attention", "decode_attention", "paged_decode_attention",
-           "paged_prefill_attention", "rwkv6_wkv", "int8_matmul",
-           "int8_matmul_quantized", "quantize_rows", "quantize_cols"]
+           "paged_prefill_attention", "paged_verify_attention", "rwkv6_wkv",
+           "int8_matmul", "int8_matmul_quantized", "quantize_rows",
+           "quantize_cols"]

@@ -183,6 +183,29 @@ def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
       q, k_pool, v_pool)
 
 
+def paged_verify_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           positions: jax.Array, *,
+                           scale: float | None = None,
+                           interpret: bool = False) -> jax.Array:
+    """Multi-query-per-lane decode attention (speculative verify).
+
+    q: (B, Q, H, D) — the current input token plus K draft tokens per
+    lane, query i at absolute position ``positions[b] + i``, all verified
+    against the block table in one pass; k_pool/v_pool: (n_blocks, bs, K,
+    D) with the Q tokens' own KV already written; block_tables: (B, T)
+    (pad unused slots with 0); positions: (B,) -> o (B, Q, H, D).
+
+    The mask walk is exactly chunked prefill with ``starts == positions``
+    (query i sees kpos <= positions + i), so the same online-softmax
+    kernel body serves both entry points; only the calling convention —
+    decode-style positions instead of prefill starts — differs.
+    """
+    return paged_prefill_attention(q, k_pool, v_pool, block_tables,
+                                   positions, scale=scale,
+                                   interpret=interpret)
+
+
 def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                            block_tables: jax.Array, positions: jax.Array, *,
                            scale: float | None = None,

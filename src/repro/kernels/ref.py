@@ -85,6 +85,21 @@ def paged_prefill_attention_ref(q, k_pool, v_pool, block_tables, starts, *,
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_verify_attention_ref(q, k_pool, v_pool, block_tables, positions, *,
+                               scale=None):
+    """Multi-query-per-lane decode ("verify") attention oracle.
+
+    q: (B, Q, H, D) — Q query tokens per lane, query i sitting at absolute
+    position ``positions[b] + i`` (speculative-decode verification: the
+    current input plus K draft tokens); k_pool/v_pool: (n_blocks, bs, K, D)
+    with the Q tokens' own KV already written; block_tables: (B, T);
+    positions: (B,).  Identical mask walk to chunked prefill with
+    ``starts == positions`` — query i sees kpos <= positions + i.
+    """
+    return paged_prefill_attention_ref(q, k_pool, v_pool, block_tables,
+                                       positions, scale=scale)
+
+
 def rwkv6_wkv_ref(r, k, v, w, u, s0):
     """r/k/v/w: (B, T, H, D); u: (H, D); s0: (B, H, D, D)."""
     def step(s, inp):

@@ -352,6 +352,165 @@ def sharded_xent(x, w_u, labels, cfg: ArchConfig, plan: ShardPlan,
 
 
 # ---------------------------------------------------------------------------
+# sampling / speculative-decode helpers
+# ---------------------------------------------------------------------------
+
+# Salts folded into per-lane PRNG keys so every sampling event at one
+# sequence index draws from a distinct stream.  Keys fold the ABSOLUTE
+# sequence index of the token being decided, which makes streams
+# replay-stable across preemption and horizon re-splits.
+SALT_SAMPLE = 0   # non-speculative draws (scan step / first prefill token)
+SALT_DRAFT = 1    # drafter proposal draws
+SALT_ACCEPT = 2   # rejection-sampling accept uniforms
+SALT_BONUS = 3    # residual / bonus draws after the accepted prefix
+
+
+def lane_keys(seeds):
+    """Per-lane base PRNG keys from int32 seeds: (B,) -> (B, 2) uint32."""
+    return jax.vmap(jax.random.PRNGKey)(seeds)
+
+
+def event_keys(base_keys, seq_idx, salt):
+    """``fold(fold(base, seq_idx), salt)`` per lane.
+
+    base_keys: (B, 2); seq_idx: (B,) or (B, Q) absolute sequence index of
+    the token the event decides.  Returns keys of seq_idx.shape + (2,).
+    """
+    seq_idx = jnp.asarray(seq_idx, jnp.uint32)
+    salt_arr = jnp.full(seq_idx.shape, salt, jnp.uint32)
+    if seq_idx.ndim == 2:
+        keys = jnp.broadcast_to(base_keys[:, None, :],
+                                seq_idx.shape + (base_keys.shape[-1],))
+        fold = jax.vmap(jax.vmap(jax.random.fold_in))
+    else:
+        keys = base_keys
+        fold = jax.vmap(jax.random.fold_in)
+    return fold(fold(keys, seq_idx), salt_arr)
+
+
+def uniform_lanes(keys):
+    """One U[0, 1) draw per key; keys: (..., 2) raw PRNG key data."""
+    flat = keys.reshape(-1, keys.shape[-1])
+    u = jax.vmap(jax.random.uniform)(flat)
+    return u.reshape(keys.shape[:-1])
+
+
+def sampling_dist(logits, temps, top_ks):
+    """Per-lane warped sampling distribution over the real vocab.
+
+    logits: (..., V) already sliced to the real vocab; temps/top_ks:
+    (...,).  Lanes with ``temps <= 0`` get a ONE-HOT argmax distribution,
+    so the single rejection-sampling path degenerates bit-exactly to
+    greedy acceptance; ``top_ks <= 0`` disables top-k truncation.
+    Returns float32 probs.
+    """
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    greedy = temps <= 0.0
+    top = jnp.sort(logits, axis=-1)[..., ::-1]
+    kth = jnp.take_along_axis(
+        top, jnp.clip(top_ks - 1, 0, V - 1)[..., None], axis=-1)
+    keep = (logits >= kth) | (top_ks <= 0)[..., None]
+    t = jnp.where(greedy, 1.0, jnp.maximum(temps, 1e-6))[..., None]
+    probs = jax.nn.softmax(jnp.where(keep, logits / t, NEG_INF), axis=-1)
+    one_hot = jax.nn.one_hot(jnp.argmax(logits, axis=-1), V,
+                             dtype=jnp.float32)
+    return jnp.where(greedy[..., None], one_hot, probs)
+
+
+def sample_from_dist(keys, probs, greedy):
+    """One token per lane from ``probs``; greedy lanes take the argmax
+    EXACTLY (categorical over a one-hot is only almost-surely the argmax).
+
+    keys: (..., 2); probs: (..., V); greedy: (...,) bool -> (...) int32.
+    """
+    flat_k = keys.reshape(-1, keys.shape[-1])
+    flat_p = probs.reshape(-1, probs.shape[-1])
+    drawn = jax.vmap(
+        lambda k, p: jax.random.categorical(k, jnp.log(p + 1e-30)))(
+            flat_k, flat_p).reshape(probs.shape[:-1])
+    return jnp.where(greedy, jnp.argmax(probs, axis=-1),
+                     drawn).astype(jnp.int32)
+
+
+def rejection_choose(base_keys, pos_eff, drafts, q_dists, p_dists, greedy,
+                     n_valid):
+    """Standard speculative rejection sampling, vectorised per lane.
+
+    drafts: (B, K) proposal tokens with proposal dists ``q_dists``
+    (B, K, V); ``p_dists``: (B, K+1, V) target dists for every slot.
+    Draft j is accepted iff ``u_j * q_j(d_j) < p_j(d_j)`` with u_j ~
+    U[0, 1) keyed on the token's absolute slot index (SALT_ACCEPT); the
+    token at the first rejected slot is drawn from the renormalised
+    residual ``max(p - q, 0)`` (SALT_BONUS), falling back to p when the
+    residual vanishes (q == p); slot K has q = 0, so its "residual" is
+    the plain bonus draw from p.  The emitted-token marginal at every
+    consumed slot equals p exactly; greedy lanes (one-hot dists) accept
+    iff the draft is the argmax and correct with the argmax.
+
+    Returns ``(n_acc (B,) accepted-prefix length, capped at
+    max(n_valid - 1, 0) so the bonus slot stays in range, cand_out
+    (B, K+1) the would-be emitted token per slot)``.
+    """
+    B, spec_k = drafts.shape
+    K1 = spec_k + 1
+    V = p_dists.shape[-1]
+    p_d = jnp.take_along_axis(p_dists[:, :spec_k],
+                              drafts[..., None], axis=2)[..., 0]
+    q_d = jnp.take_along_axis(q_dists, drafts[..., None], axis=2)[..., 0]
+    slot_idx = pos_eff[:, None] + 1 + jnp.arange(spec_k)[None, :]
+    u = uniform_lanes(event_keys(base_keys, slot_idx, SALT_ACCEPT))
+    accept = u * q_d < p_d
+    n_acc = jnp.cumprod(accept.astype(jnp.int32), axis=1).sum(axis=1)
+    n_acc = jnp.minimum(n_acc, jnp.maximum(n_valid - 1, 0))
+
+    q_ext = jnp.concatenate([q_dists, jnp.zeros((B, 1, V), jnp.float32)],
+                            axis=1)
+    resid = jnp.maximum(p_dists - q_ext, 0.0)
+    rsum = resid.sum(axis=-1, keepdims=True)
+    resid = jnp.where(rsum > 1e-9, resid / jnp.maximum(rsum, 1e-30),
+                      p_dists)
+    emit_idx = pos_eff[:, None] + 1 + jnp.arange(K1)[None, :]
+    corr = sample_from_dist(event_keys(base_keys, emit_idx, SALT_BONUS),
+                            resid, jnp.broadcast_to(greedy[:, None], (B, K1)))
+    j = jnp.arange(K1)[None, :]
+    d_ext = jnp.concatenate([drafts, jnp.zeros((B, 1), jnp.int32)], axis=1)
+    cand_out = jnp.where(j < n_acc[:, None], d_ext, corr)
+    return n_acc, cand_out
+
+
+def ngram_propose(hist, positions, *, k: int, n: int = 2):
+    """Prompt-lookup drafting (drafter-free speculation).
+
+    Match the n-token suffix ending at ``positions`` against every earlier
+    window of the sequence history and propose the k tokens that followed
+    the MOST RECENT match; with no match (or too little history) repeat
+    the current last token.  hist: (B, S) int32, ``hist[b, i]`` = i-th
+    sequence token, valid through ``positions[b]``; returns (B, k) int32.
+    """
+    B, S = hist.shape
+    last = jnp.take_along_axis(hist, jnp.clip(positions, 0, S - 1)[:, None],
+                               axis=1)
+    nw = S - n
+    if nw <= 0:
+        return jnp.broadcast_to(last, (B, k)).astype(jnp.int32)
+    windows = jnp.stack([hist[:, j:nw + j] for j in range(n)], axis=-1)
+    suf_idx = jnp.clip(positions[:, None] - (n - 1) + jnp.arange(n)[None, :],
+                       0, S - 1)
+    suffix = jnp.take_along_axis(hist, suf_idx, axis=1)
+    starts = jnp.arange(nw)
+    match = jnp.all(windows == suffix[:, None, :], axis=-1)
+    # the window must END strictly before the suffix itself (start <=
+    # pos - n), which also keeps its continuation a known token
+    match &= starts[None, :] <= positions[:, None] - n
+    best = jnp.max(jnp.where(match, starts[None, :], -1), axis=1)
+    cont_idx = jnp.minimum(best[:, None] + n + jnp.arange(k)[None, :],
+                           positions[:, None])
+    drafts = jnp.take_along_axis(hist, jnp.clip(cont_idx, 0, S - 1), axis=1)
+    return jnp.where(best[:, None] >= 0, drafts, last).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
 # Model
 # ---------------------------------------------------------------------------
 
@@ -533,7 +692,8 @@ class Model:
 
     def decode_multi_paged(self, params, cache, tokens, positions,
                            block_tables, active, budgets, eos_ids,
-                           num_steps: int, max_len: int):
+                           num_steps: int, max_len: int,
+                           temps=None, top_ks=None, seeds=None):
         """Fused multi-step greedy decode over the paged pool.
 
         Runs ``num_steps`` decode iterations inside one jitted
@@ -551,6 +711,13 @@ class Model:
         be allocated before entry (``PagedCachePool.ensure_append_blocks``
         with the same horizon).
 
+        With ``temps``/``top_ks``/``seeds`` (all (B,)) set, sampling
+        replaces argmax per lane: each step's token is drawn from the
+        temperature/top-k-warped distribution with a key folded from the
+        lane seed and the token's absolute sequence index (replay-stable);
+        lanes with ``temps[b] <= 0`` still take the exact argmax.  The
+        default ``None`` builds the identical graph as before.
+
         Returns ``(out_tokens (N, B), emitted (N, B) bool — token [i, b]
         valid iff emitted, last_logits (B, V_pad), (tokens, positions,
         active, budgets) final state, cache)``.
@@ -559,15 +726,34 @@ class Model:
         v_pad = params["embed"].shape[0] if "embed" in params else \
             self._unembed_w(params).shape[1]
         logits0 = jnp.zeros((tokens.shape[0], v_pad), plan.compute_dtype)
+        base_keys = lane_keys(seeds) if temps is not None else None
 
         def one_step(carry, _):
+            # dead tail steps (every lane drained) skip the model at
+            # runtime, so the engine can always launch `horizon` steps —
+            # one jit variant — without paying for the unused tail
+            return jax.lax.cond(jnp.any(carry[3]), live_step, parked_step,
+                                carry)
+
+        def parked_step(carry):
+            B = carry[1].shape[0]
+            return carry, (jnp.zeros((B,), jnp.int32),
+                           jnp.zeros((B,), bool))
+
+        def live_step(carry):
             cache, tokens, positions, active, budgets, _ = carry
             pos_eff = jnp.where(active, positions, 0)
             bt_eff = jnp.where(active[:, None], block_tables, 0)
             logits, cache = self.decode_step_paged(
                 params, cache, tokens, pos_eff, bt_eff)
-            nxt = jnp.argmax(logits[:, : cfg.vocab_size],
-                             axis=-1).astype(jnp.int32)
+            if temps is None:
+                nxt = jnp.argmax(logits[:, : cfg.vocab_size],
+                                 axis=-1).astype(jnp.int32)
+            else:
+                dist = sampling_dist(logits[:, : cfg.vocab_size], temps,
+                                     top_ks)
+                keys = event_keys(base_keys, positions + 1, SALT_SAMPLE)
+                nxt = sample_from_dist(keys, dist, temps <= 0.0)
             emitted = active
             budgets = budgets - emitted.astype(jnp.int32)
             done = emitted & ((budgets <= 0) | (nxt == eos_ids)
@@ -585,6 +771,178 @@ class Model:
                 one_step, carry0, None, length=num_steps)
         return (out_tokens, emitted, last_logits,
                 (tokens, positions, active, budgets), cache)
+
+    def decode_verify_paged(self, params, cache, tokens, positions,
+                            block_tables, n_valid):
+        """Target forward over Q candidate tokens per lane in ONE paged
+        pass (speculative verify): the current input token plus K drafts,
+        token i at absolute position ``positions[b] + i``.
+
+        The Q candidates fold into the lane axis — candidate i becomes a
+        pseudo-lane at position ``positions[b] + i`` sharing lane b's
+        block-table row — and run through ``decode_step_paged`` verbatim.
+        All Q keys scatter into the pool before the (position-masked)
+        attention gather, so candidate i sees candidates < i causally;
+        because every op is the exact decode-step graph (just a larger
+        batch) the per-position logits are BITWISE equal to sequential
+        single-token decode — greedy speculative streams match plain
+        decode exactly, not just to tolerance.  (The standalone
+        multi-query kernel ``ops.paged_verify_attention`` computes the
+        same attention in one prefill-style pass; it is kept as the
+        general-purpose form but differs from the decode kernel by bf16
+        ulps, which is why the model path folds instead.)
+
+        Tokens at index >= ``n_valid[b]`` are routed to the parking block
+        (their logits are garbage — callers must ignore them).  Returns
+        (logits (B, Q, V_pad) — ``logits[b, i]`` predicts position
+        ``positions[b] + i + 1`` — and the cache).
+        """
+        B, Q = tokens.shape
+        j = jnp.arange(Q, dtype=jnp.int32)
+        valid = j[None, :] < n_valid[:, None]                        # (B, Q)
+        pos = jnp.where(valid, positions[:, None] + j[None, :], 0)
+        tab = jnp.where(valid[..., None], block_tables[:, None, :], 0)
+        logits, new_cache = self.decode_step_paged(
+            params, cache, tokens.reshape(B * Q), pos.reshape(B * Q),
+            tab.reshape(B * Q, tab.shape[-1]))
+        return logits.reshape(B, Q, logits.shape[-1]), new_cache
+
+    def decode_spec_paged(self, drafter, params, cache, d_params, d_cache,
+                          hist, tokens, positions, block_tables, active,
+                          budgets, eos_ids, temps, top_ks, seeds, *,
+                          num_steps: int, spec_k: int, max_len: int,
+                          ngram: int = 2):
+        """Fused speculative decode over the paged pool.
+
+        Each of ``num_steps`` rounds proposes ``spec_k`` draft tokens per
+        lane — from ``drafter`` (a paired smaller Model whose paged cache
+        ``d_cache`` shares this pool's block tables) or, when ``drafter``
+        is None, by n-gram prompt-lookup over the sequence history
+        ``hist`` — then verifies all spec_k + 1 positions in ONE target
+        pass (``decode_verify_paged``) and advances each lane by its
+        accepted prefix plus one corrected/bonus token via standard
+        rejection sampling (accept draft d iff ``u * q(d) < p(d)``;
+        residual ``max(p - q, 0)`` renormalised on rejection; bonus from
+        p on full acceptance).  Greedy lanes (``temps <= 0``) use one-hot
+        distributions, so acceptance degenerates to exact argmax
+        agreement and the emitted stream is bit-identical to
+        ``decode_multi_paged``.
+
+        Rejected tails need no KV rollback: position p is always the
+        next-write slot, so a stale slot is rewritten the moment that
+        position is consumed again as an input token; positions, budgets
+        and the history only advance by emitted tokens.  Blocks for the
+        worst case (spec_k + 1 writes per round) must be pre-allocated
+        (``ensure_append_blocks`` with the padded horizon).
+
+        Returns ``(out_tokens (N, B, spec_k+1), emitted (N, B, spec_k+1)
+        bool, n_acc (N, B) accepted drafts per round, (tokens, positions,
+        active, budgets) final state, cache, d_cache, hist)``.
+        """
+        cfg, plan = self.cfg, self.plan
+        B = tokens.shape[0]
+        K1 = spec_k + 1
+        base_keys = lane_keys(seeds)
+        greedy = temps <= 0.0
+        hist_w = hist.shape[1]
+
+        def one_round(carry, _):
+            # once every lane has drained its budget the remaining rounds
+            # of the fixed-length scan skip the model entirely (lax.cond
+            # executes one branch at runtime), so the engine can launch a
+            # constant number of rounds — one jit variant, no retraces —
+            # without paying for dead tail rounds
+            return jax.lax.cond(jnp.any(carry[5]), live_round, parked_round,
+                                carry)
+
+        def parked_round(carry):
+            return carry, (jnp.zeros((B, K1), jnp.int32),
+                           jnp.zeros((B, K1), bool),
+                           jnp.zeros((B,), jnp.int32))
+
+        def live_round(carry):
+            cache, d_cache, hist, tokens, positions, active, budgets = carry
+            pos_eff = jnp.where(active, positions, 0)
+            bt_eff = jnp.where(active[:, None], block_tables, 0)
+
+            # ---- propose spec_k draft tokens + their proposal dists q
+            if drafter is None:
+                drafts = ngram_propose(hist, pos_eff, k=spec_k, n=ngram)
+                q_dists = jax.nn.one_hot(drafts, cfg.vocab_size,
+                                         dtype=jnp.float32)
+                new_d_cache = d_cache
+            else:
+                def d_step(dc, j):
+                    d_cache, cur = dc
+                    p_j = jnp.minimum(pos_eff + j, max_len - 1)
+                    lg, d_cache = drafter.decode_step_paged(
+                        d_params, d_cache, cur, p_j, bt_eff)
+                    qd = sampling_dist(lg[:, : cfg.vocab_size], temps,
+                                       top_ks)
+                    keys = event_keys(base_keys, pos_eff + j + 1,
+                                      SALT_DRAFT)
+                    nxt = sample_from_dist(keys, qd, greedy)
+                    return (d_cache, nxt), (nxt, qd)
+
+                (new_d_cache, d_last), (drafts, q_dists) = jax.lax.scan(
+                    d_step, (d_cache, tokens), jnp.arange(spec_k))
+                # backfill d_K so the drafter cache has no hole next round
+                p_b = jnp.minimum(pos_eff + spec_k, max_len - 1)
+                _, new_d_cache = drafter.decode_step_paged(
+                    d_params, new_d_cache, d_last, p_b, bt_eff)
+                drafts = drafts.transpose(1, 0)
+                q_dists = q_dists.transpose(1, 0, 2)
+
+            # ---- verify all spec_k + 1 positions in one target pass
+            cand_in = jnp.concatenate([tokens[:, None], drafts], axis=1)
+            n_valid = jnp.where(active,
+                                jnp.clip(max_len - pos_eff, 0, K1), 0)
+            logits, cache = self.decode_verify_paged(
+                params, cache, cand_in, pos_eff, bt_eff, n_valid)
+            p_dists = sampling_dist(
+                logits[..., : cfg.vocab_size],
+                jnp.broadcast_to(temps[:, None], (B, K1)),
+                jnp.broadcast_to(top_ks[:, None], (B, K1)))
+
+            # ---- rejection-sample the accepted prefix + correction/bonus
+            n_acc, cand_out = rejection_choose(
+                base_keys, pos_eff, drafts, q_dists, p_dists, greedy,
+                n_valid)
+            j = jnp.arange(K1)[None, :]
+
+            # ---- stop flags, replicating decode_multi_paged's per-step
+            # semantics: token slot j is this round's (j+1)-th emission
+            stop = ((budgets[:, None] - (j + 1) <= 0)
+                    | (cand_out == eos_ids[:, None])
+                    | (pos_eff[:, None] + j + 1 >= max_len))
+            stopped_before = (jnp.cumsum(stop.astype(jnp.int32), axis=1)
+                              - stop.astype(jnp.int32)) > 0
+            emit = active[:, None] & (j <= n_acc[:, None]) & ~stopped_before
+            done = jnp.any(emit & stop, axis=1)
+            m = emit.sum(axis=1)
+
+            # ---- advance lane state by the emitted run
+            last_tok = jnp.take_along_axis(
+                cand_out, jnp.maximum(m - 1, 0)[:, None], axis=1)[:, 0]
+            tokens = jnp.where(m > 0, last_tok, tokens)
+            positions = positions + m
+            budgets = budgets - m
+            active = active & ~done
+            upd_idx = jnp.where(emit, pos_eff[:, None] + j + 1, hist_w)
+            hist = jax.vmap(
+                lambda h, i, v: h.at[i].set(v, mode="drop"))(
+                    hist, upd_idx, cand_out)
+
+            carry = (cache, new_d_cache, hist, tokens, positions, active,
+                     budgets)
+            return carry, (cand_out, emit, n_acc)
+
+        carry0 = (cache, d_cache, hist, tokens, positions, active, budgets)
+        (cache, d_cache, hist, tokens, positions, active, budgets), \
+            (out_tokens, emitted, n_accs) = jax.lax.scan(
+                one_round, carry0, None, length=num_steps)
+        return (out_tokens, emitted, n_accs,
+                (tokens, positions, active, budgets), cache, d_cache, hist)
 
     def prefill_chunk_paged(self, params, cache, tokens, starts, lengths,
                             block_tables):

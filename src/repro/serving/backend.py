@@ -53,7 +53,7 @@ class EngineBackend:
                  requests_per_load: float = 3.0,
                  steps_per_tick: int = 4,
                  prompt_len: int = 6, max_new_tokens: int = 4,
-                 seed: int = 0):
+                 seed: int = 0, draft_min_freq: float | None = None):
         n = engine.n_slots
         self.engine = engine
         self.variant_for_size = variant_for_size or {}
@@ -74,6 +74,13 @@ class EngineBackend:
         self._next_id = 0
         self._last_rate = 0.0
         self.applied: list[ConfigPoint] = []   # reconfigure decisions seen
+        # speculation as a reconfigure axis: under a deep frequency cap
+        # the drafter's extra passes stop paying for themselves, so the
+        # control plane drops it (like quantization) and restores it when
+        # the cap lifts.  None disables the rule.
+        self.draft_min_freq = draft_min_freq
+        self._stashed_draft: str | None = None
+        self.draft_drops = 0
 
     # -- control-plane side ------------------------------------------------
     def apply_config(self, cfg: ConfigPoint, *, paused: bool = False) -> None:
@@ -86,6 +93,16 @@ class EngineBackend:
         variant = self.variant_for_size.get(cfg.size)
         if variant is not None and variant != knobs.variant:
             self.engine.set_variant(variant)
+        if self.draft_min_freq is not None:
+            if cfg.freq < self.draft_min_freq:
+                if self.engine.draft_name is not None:
+                    self._stashed_draft = self.engine.draft_name
+                    self.engine.set_drafter(None)
+                    self.draft_drops += 1
+            elif self._stashed_draft is not None \
+                    and self.engine.draft_name is None:
+                self.engine.set_drafter(self._stashed_draft)
+                self._stashed_draft = None
         self.applied.append(cfg)
 
     # -- workload side -----------------------------------------------------

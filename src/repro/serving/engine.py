@@ -38,6 +38,7 @@ The paged decode hot path is device-resident end to end:
 """
 from __future__ import annotations
 
+import functools
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -47,7 +48,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.transformer import Model
+from repro.configs.drafters import check_draft_pair
+from repro.core.traces import _stable_seed
+from repro.models.transformer import (SALT_SAMPLE, Model, event_keys,
+                                      lane_keys, sample_from_dist,
+                                      sampling_dist)
 from repro.serving.kvcache import CachePool, PagedCachePool
 from repro.serving.request import Request
 
@@ -74,6 +79,12 @@ class EngineStats:
     rejected: int = 0            # contexts that can never fit max_seq
     host_syncs: int = 0          # device->host readbacks on the serving path
     decode_syncs: int = 0        # the subset issued by decode launches
+    # speculative decode accounting: one verify pass emits a whole
+    # accepted run, so tokens-per-pass (and tokens-per-sync) is the
+    # speedup speculation buys, not the old one-pass-per-token identity
+    draft_tokens: int = 0        # drafts proposed across verify passes
+    accepted_tokens: int = 0     # drafts accepted (excludes bonus tokens)
+    verify_passes: int = 0       # target verify passes (lane-rounds) run
     n_steps: int = 0             # recorded (working) scheduler steps
     step_time_total: float = 0.0  # running sum of freq-scaled step times
     completed: list = field(default_factory=list)
@@ -103,6 +114,17 @@ class EngineStats:
         self._good_acc[key] = (len(self.completed), good, t_max)
         return good / t_max
 
+    @property
+    def accepted_per_sync(self) -> float:
+        """Accepted draft tokens per decode sync — the free tokens each
+        host round-trip carried on top of the one-per-pass baseline."""
+        return self.accepted_tokens / max(self.decode_syncs, 1)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens the target accepted."""
+        return self.accepted_tokens / max(self.draft_tokens, 1)
+
 
 def _bucket(n: int, lo: int = 16, hi: int | None = None) -> int:
     """Power-of-two prompt-length bucket (bounds distinct prefill shapes).
@@ -125,7 +147,8 @@ class Engine:
                  paged: bool | None = None, block_size: int = 16,
                  n_blocks: int | None = None, horizon: int = 1,
                  prefill_chunk: int | None = None,
-                 prefix_share: bool = False):
+                 prefix_share: bool = False, spec_k: int = 4,
+                 draft: str | None = None, ngram: int = 2, seed: int = 0):
         self.model = model
         self.variants: dict[str, tuple[Model, Any]] = {"full": (model, params)}
         self.knobs = knobs or EngineKnobs(max_batch=n_slots)
@@ -147,6 +170,25 @@ class Engine:
         if (prefill_chunk or prefix_share) and not self.paged:
             raise ValueError("chunked prefill / prefix sharing require the "
                              "paged serving mode")
+        # speculative decode: ``draft`` picks the proposer ("ngram" =
+        # prompt-lookup, or a model drafter registered via add_drafter);
+        # spec_k drafts are verified per target pass.  draft=None keeps
+        # the plain fused-horizon decode path, graph-for-graph.
+        if draft is not None and not self.paged:
+            raise ValueError("speculative decoding requires the paged "
+                             "serving mode")
+        if draft is not None and spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1 with a drafter, "
+                             f"got {spec_k}")
+        if draft is not None and draft != "ngram":
+            raise ValueError("model drafters are registered via "
+                             "add_drafter()/set_drafter(); the constructor "
+                             "only accepts draft='ngram' or None")
+        self.spec_k = spec_k
+        self.draft_name = draft
+        self.ngram = ngram
+        self.seed = seed
+        self.drafters: dict[str, tuple[Model, Any]] = {}
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}
         self.prefilling: dict[int, Request] = {}
@@ -177,6 +219,90 @@ class Engine:
             self.pool = CachePool(model, self.n_slots, self.max_seq)
             self._prefill_jit = jax.jit(model.prefill)
             self._decode_jit = jax.jit(model.decode_step)
+        self._bind_spec()
+
+    # -- speculative decode (drafter lifecycle) ----------------------------
+    @property
+    def _spec_on(self) -> bool:
+        return self.paged and self.spec_k > 0 and self.draft_name is not None
+
+    def _bind_spec(self) -> None:
+        """(Re)build the speculative entry points for the current target
+        model and drafter choice."""
+        self._decode_spec_jit = None
+        self._d_params = None
+        self._draft_prefill_jit = None
+        self._draft_chunk_jit = None
+        if not self._spec_on:
+            if self.paged:
+                self.pool.detach_draft()
+            return
+        if self.draft_name == "ngram":
+            d_model = None
+            self.pool.detach_draft()
+        else:
+            d_model, d_params = self.drafters[self.draft_name]
+            check_draft_pair(self.model.cfg, d_model.cfg)
+            self.pool.attach_draft(d_model)
+            self._d_params = d_params
+            self._draft_prefill_jit = jax.jit(d_model.prefill_ragged)
+            self._draft_chunk_jit = jax.jit(d_model.prefill_chunk_paged,
+                                            donate_argnums=(1,))
+        self._decode_spec_jit = jax.jit(
+            functools.partial(Model.decode_spec_paged, self.model, d_model),
+            static_argnames=("num_steps", "spec_k", "max_len", "ngram"),
+            donate_argnums=(1, 3))
+
+    def add_drafter(self, name: str, model: Model, params: Any) -> None:
+        """Register a small same-tokenizer model as a drafter choice
+        (pairing is validated: shared vocab + paged-servable)."""
+        check_draft_pair(self.model.cfg, model.cfg)
+        self.drafters[name] = (model, params)
+
+    def set_drafter(self, name: str | None) -> None:
+        """Switch the speculation proposer mid-flight: None (off),
+        "ngram" (prompt-lookup), or a registered model drafter.
+
+        In-flight requests keep their target KV — speculation only
+        changes how candidate tokens are PROPOSED, never what the target
+        accepts, so no preemption is needed.  A freshly attached model
+        drafter starts with a cold draft cache; that costs acceptance
+        rate until lanes turn over, not correctness.
+        """
+        if name == self.draft_name:
+            return
+        if name is not None and name != "ngram" and name not in self.drafters:
+            raise KeyError(f"unknown drafter {name!r}")
+        self.draft_name = name
+        self._bind_spec()
+
+    def _req_seed(self, req: Request) -> int:
+        """Per-request deterministic sampling seed: the request's own, or
+        a crc32 fold of (engine seed, req_id) — process-stable, so
+        sampled replays reproduce across runs (the trace_seed idiom)."""
+        if req.seed is not None:
+            return int(req.seed) % (2 ** 31)
+        return _stable_seed("request", self.seed, req.req_id) % (2 ** 31)
+
+    def _next_from_prefill(self, logits, reqs: list, idx) -> np.ndarray:
+        """Each row's first output token from its prefill logits: argmax,
+        with sampled rows (temperature > 0) drawn from the warped
+        distribution under the request's deterministic key.  Folding the
+        token's absolute sequence index keeps resumes replay-stable; the
+        all-greedy fast path is byte-identical to the old argmax."""
+        v = self.model.cfg.vocab_size
+        nxt = np.array(jnp.argmax(logits[:, :v], axis=-1))
+        if not any(r.temperature > 0 for r in reqs):
+            return nxt
+        rows = len(reqs)
+        temps = jnp.asarray([r.temperature for r in reqs], jnp.float32)
+        tks = jnp.asarray([r.top_k for r in reqs], jnp.int32)
+        seeds = jnp.asarray([self._req_seed(r) for r in reqs], jnp.int32)
+        dist = sampling_dist(logits[:rows, :v], temps, tks)
+        keys = event_keys(lane_keys(seeds),
+                          jnp.asarray(idx[:rows], jnp.int32), SALT_SAMPLE)
+        nxt[:rows] = np.asarray(sample_from_dist(keys, dist, temps <= 0.0))
+        return nxt
 
     # -- variant management (model-size / quantization knob) --------------
     def add_variant(self, name: str, model: Model, params: Any) -> None:
@@ -229,6 +355,9 @@ class Engine:
         req.output.append(tok)
         if req.first_token_s is None:
             req.first_token_s = now
+        if self._spec_on:
+            lane = self.pool.lane_of[req.req_id]
+            self.pool.set_hist_token(lane, int(self.pool.lengths[lane]), tok)
         if (len(req.output) >= req.max_new_tokens
                 or (req.eos_id is not None and tok == req.eos_id)):
             req.finish_s = now
@@ -257,7 +386,8 @@ class Engine:
             logits, cache = self._prefill_jit(self.params, prompt)
             self.stats.prefill_tokens += prompt.shape[1]
             self.stats.prefill_batches += 1
-            tok = int(jnp.argmax(logits[0, : self.model.cfg.vocab_size]))
+            tok = int(self._next_from_prefill(
+                logits, [req], np.asarray([prompt.shape[1]]))[0])
             self.stats.host_syncs += 1
             self.pool.insert(req.req_id, cache, prompt.shape[1])
             self._activate(req, tok, now)
@@ -303,12 +433,24 @@ class Engine:
                 lengths[i] = len(ctx)
             logits, cache = self._prefill_jit(
                 self.params, jnp.asarray(tokens), jnp.asarray(lengths))
-            nxt = np.asarray(
-                jnp.argmax(logits[:, : self.model.cfg.vocab_size], axis=-1))
+            nxt = self._next_from_prefill(logits, reqs, lengths)
             self.stats.prefill_batches += 1
             self.stats.host_syncs += 1
+            d_cache = None
+            if self._draft_prefill_jit is not None:
+                # drafter KV for the same rows, scattered into the SAME
+                # blocks (the draft pool shares this pool's block tables)
+                _, d_cache = self._draft_prefill_jit(
+                    self._d_params, jnp.asarray(tokens),
+                    jnp.asarray(lengths))
             for i, req in enumerate(reqs):
-                self.pool.insert(req.req_id, cache, i, int(lengths[i]))
+                lane = self.pool.insert(req.req_id, cache, i,
+                                        int(lengths[i]))
+                if self._spec_on:
+                    self.pool.set_hist(lane, self._context(req))
+                if d_cache is not None:
+                    self.pool.insert_draft(req.req_id, d_cache, i,
+                                           int(lengths[i]))
                 self.stats.prefill_tokens += int(lengths[i])
                 self._activate(req, int(nxt[i]), now)
 
@@ -341,6 +483,8 @@ class Engine:
             if lane is None:
                 break
             req = self.queue.popleft()
+            if self._spec_on:
+                self.pool.set_hist(lane, ctx)
             self.prefilling[req.req_id] = req
             self._prefill_pos[req.req_id] = \
                 len(shared) * self.pool.block_size
@@ -373,14 +517,21 @@ class Engine:
         logits, self.pool.cache = self._prefill_chunk_jit(
             self.params, self.pool.cache, jnp.asarray(tokens),
             jnp.asarray(starts), jnp.asarray(lens), jnp.asarray(tables))
+        if self._draft_chunk_jit is not None:
+            # stream the same chunk through the drafter into its pool
+            _, self.pool.draft_cache = self._draft_chunk_jit(
+                self._d_params, self.pool.draft_cache, jnp.asarray(tokens),
+                jnp.asarray(starts), jnp.asarray(lens), jnp.asarray(tables))
         self.stats.prefill_batches += 1
         done_rows = [i for i, (req, ctx, take) in
                      enumerate(zip(reqs, ctxs, takes))
                      if self._prefill_pos[req.req_id] + take == len(ctx)]
         nxt = None
         if done_rows:
-            nxt = np.asarray(
-                jnp.argmax(logits[:, : self.model.cfg.vocab_size], axis=-1))
+            nxt = self._next_from_prefill(
+                logits, reqs,
+                np.asarray([self._prefill_pos[r.req_id] + t
+                            for r, t in zip(reqs, takes)]))
             self.stats.host_syncs += 1
         worked = 0
         for i, (req, ctx, take) in enumerate(zip(reqs, ctxs, takes)):
@@ -415,9 +566,10 @@ class Engine:
         produced ``(tokens, emitted)`` horizon."""
         budgets = {rid: req.max_new_tokens - len(req.output)
                    for rid, req in self.active.items()}
-        # bucket the launch length so shrinking tail budgets don't retrace
-        n_eff = min(self.horizon,
-                    _bucket(max(1, max(budgets.values())), lo=1))
+        # always launch `horizon` steps: the scan skips drained tail steps
+        # on-device (lax.cond), so num_steps stays one static value and
+        # the decode graph never retraces mid-run
+        n_eff = self.horizon
         # allocate append blocks oldest-request-first; when the pool is
         # exhausted the youngest actives are the ones preempted
         victims = self.pool.ensure_append_blocks(
@@ -430,18 +582,31 @@ class Engine:
         active_mask = np.zeros(width, bool)
         budget_arr = np.zeros(width, np.int32)
         eos_arr = np.full(width, -1, np.int32)
+        sampled = any(r.temperature > 0 for r in self.active.values())
+        temp_arr = np.zeros(width, np.float32)
+        topk_arr = np.zeros(width, np.int32)
+        seed_arr = np.zeros(width, np.int32)
         for rid, req in self.active.items():
             lane = self.pool.lane_of[rid]
             active_mask[lane] = True
             budget_arr[lane] = budgets[rid]
             if req.eos_id is not None:
                 eos_arr[lane] = req.eos_id
+            temp_arr[lane] = req.temperature
+            topk_arr[lane] = req.top_k
+            seed_arr[lane] = self._req_seed(req)
+        # sampling arrays are only passed when some lane needs them, so
+        # an all-greedy engine runs the identical pre-sampling graph
+        extra = dict(temps=jnp.asarray(temp_arr),
+                     top_ks=jnp.asarray(topk_arr),
+                     seeds=jnp.asarray(seed_arr)) if sampled else {}
         toks, emitted, _, (tok_f, pos_f, _, _), self.pool.cache = \
             self._decode_multi_jit(
                 self.params, self.pool.cache, self.pool.last_tokens_dev(),
                 self.pool.positions(), self.pool.tables(),
                 jnp.asarray(active_mask), jnp.asarray(budget_arr),
-                jnp.asarray(eos_arr), num_steps=n_eff, max_len=self.max_seq)
+                jnp.asarray(eos_arr), num_steps=n_eff, max_len=self.max_seq,
+                **extra)
         toks_h = np.asarray(toks)        # the horizon's single host sync
         em_h = np.asarray(emitted)
         self.stats.host_syncs += 1
@@ -471,6 +636,94 @@ class Engine:
         self.stats.decode_tokens += produced
         return produced
 
+    def _decode_spec(self, now: float) -> int:
+        """Fused speculative decode: each launch runs up to ``horizon``
+        verify rounds; every round advances each lane by its accepted
+        draft run + 1, so one host sync drains up to
+        ``horizon * (spec_k + 1)`` tokens per lane."""
+        budgets = {rid: req.max_new_tokens - len(req.output)
+                   for rid, req in self.active.items()}
+        k = self.spec_k
+        # always launch `horizon` rounds: the scan skips exhausted tail
+        # rounds on-device (lax.cond), so num_steps stays one static value
+        # and the spec graph never retraces mid-run
+        n_eff = self.horizon
+        # each round may write KV up to spec_k slots past the emitted run,
+        # so pad the per-request budgets by spec_k for block reservation
+        victims = self.pool.ensure_append_blocks(
+            sorted(self.active), horizon=n_eff * (k + 1),
+            budgets={rid: b + k for rid, b in budgets.items()})
+        if victims:
+            self._preempt(victims)
+        if not self.active:
+            return 0
+        width = self.pool.n_lanes
+        active_mask = np.zeros(width, bool)
+        budget_arr = np.zeros(width, np.int32)
+        eos_arr = np.full(width, -1, np.int32)
+        temp_arr = np.zeros(width, np.float32)
+        topk_arr = np.zeros(width, np.int32)
+        seed_arr = np.zeros(width, np.int32)
+        for rid, req in self.active.items():
+            lane = self.pool.lane_of[rid]
+            active_mask[lane] = True
+            budget_arr[lane] = budgets[rid]
+            if req.eos_id is not None:
+                eos_arr[lane] = req.eos_id
+            temp_arr[lane] = req.temperature
+            topk_arr[lane] = req.top_k
+            seed_arr[lane] = self._req_seed(req)
+        toks, em, acc, (tok_f, pos_f, _, _), self.pool.cache, \
+            self.pool.draft_cache, hist_f = self._decode_spec_jit(
+                self.params, self.pool.cache, self._d_params,
+                self.pool.draft_cache, self.pool.hist_dev(),
+                self.pool.last_tokens_dev(), self.pool.positions(),
+                self.pool.tables(), jnp.asarray(active_mask),
+                jnp.asarray(budget_arr), jnp.asarray(eos_arr),
+                jnp.asarray(temp_arr), jnp.asarray(topk_arr),
+                jnp.asarray(seed_arr), num_steps=n_eff, spec_k=k,
+                max_len=self.max_seq, ngram=self.ngram)
+        toks_h = np.asarray(toks)       # (N, B, K+1) — the single sync
+        em_h = np.asarray(em)
+        acc_h = np.asarray(acc)         # (N, B) accepted drafts per round
+        self.stats.host_syncs += 1
+        self.stats.decode_syncs += 1
+        self.pool.adopt_device("positions", pos_f)
+        self.pool.adopt_device("last_tokens", tok_f)
+        self.pool.adopt_device("hist", hist_f)
+        produced = 0
+        finished = []
+        for rid, req in list(self.active.items()):
+            lane = self.pool.lane_of[rid]
+            em_l = em_h[:, lane, :]                          # (N, K+1)
+            # row-major boolean drain preserves round-then-slot order
+            new = [int(t) for t in toks_h[:, lane, :][em_l]]
+            cnt = len(new)
+            # a verify pass ran for this lane iff its slot 0 emitted
+            rounds = int(em_l[:, 0].sum())
+            self.stats.verify_passes += rounds
+            self.stats.draft_tokens += k * rounds
+            self.stats.accepted_tokens += int(
+                np.minimum(em_l.sum(axis=1), acc_h[:, lane]).sum())
+            if cnt:
+                base = int(self.pool.lengths[lane])
+                self.pool.token_hist[lane, base + 1: base + 1 + cnt] = new
+                req.output.extend(new)
+                produced += cnt
+                self.pool.lengths[lane] += cnt
+                self.pool.last_tokens[lane] = req.output[-1]
+            full = int(self.pool.lengths[lane]) + 1 > self.max_seq
+            if (len(req.output) >= req.max_new_tokens
+                    or (req.eos_id is not None
+                        and req.output[-1] == req.eos_id) or full):
+                req.finish_s = now
+                finished.append(rid)
+        for rid in finished:
+            self.stats.completed.append(self.active.pop(rid))
+            self.pool.release(rid)
+        self.stats.decode_tokens += produced
+        return produced
+
     def _decode_slots(self, now: float) -> int:
         lanes = {rid: self.pool.slot_of[rid] for rid in self.active}
         width = self.pool.n_slots
@@ -481,8 +734,24 @@ class Engine:
         logits, self.pool.cache = self._decode_jit(
             self.params, self.pool.cache,
             jnp.asarray(tokens, jnp.int32), positions)
-        nxt = np.asarray(
-            jnp.argmax(logits[:, : self.model.cfg.vocab_size], axis=-1))
+        if any(r.temperature > 0 for r in self.active.values()):
+            temps = np.zeros(width, np.float32)
+            tks = np.zeros(width, np.int32)
+            seeds = np.zeros(width, np.int32)
+            for rid, req in self.active.items():
+                ln = lanes[rid]
+                temps[ln] = req.temperature
+                tks[ln] = req.top_k
+                seeds[ln] = self._req_seed(req)
+            t = jnp.asarray(temps)
+            dist = sampling_dist(logits[:, : self.model.cfg.vocab_size],
+                                 t, jnp.asarray(tks))
+            keys = event_keys(lane_keys(jnp.asarray(seeds)),
+                              positions + 1, SALT_SAMPLE)
+            nxt = np.asarray(sample_from_dist(keys, dist, t <= 0.0))
+        else:
+            nxt = np.asarray(
+                jnp.argmax(logits[:, : self.model.cfg.vocab_size], axis=-1))
         self.stats.host_syncs += 1
         self.stats.decode_syncs += 1
         produced = 0
@@ -516,8 +785,12 @@ class Engine:
             if self.paged and self.prefill_chunk else 0
         produced = 0
         if self.active:
-            produced = self._decode_paged(now) if self.paged \
-                else self._decode_slots(now)
+            if self._spec_on:
+                produced = self._decode_spec(now)
+            elif self.paged:
+                produced = self._decode_paged(now)
+            else:
+                produced = self._decode_slots(now)
         if produced or prefilled:
             # simulated frequency knob: a capped clock stretches wall time
             self.stats.record_step((time.perf_counter() - t0)

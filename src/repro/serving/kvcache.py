@@ -138,6 +138,11 @@ def _dev_set_item(arr, i, v):
     return arr.at[i].set(v)
 
 
+@partial(jax.jit, donate_argnums=(0,))
+def _dev_set_cell(arr, i, j, v):
+    return arr.at[i, j].set(v)
+
+
 def _chain_key(prev: bytes, tokens) -> bytes:
     """Collision-resistant running hash over block-sized token chunks."""
     h = hashlib.blake2b(prev, digest_size=16)
@@ -183,14 +188,21 @@ class PagedCachePool:
         # prefill (incremented by the engine once per waiting request,
         # not per poll)
         self.pending_share_waits = 0
+        # speculative decode: per-lane sequence history (token_hist[l, i] =
+        # i-th sequence token; width max_seq + 1 so the token AT max_seq's
+        # write position still has a slot) + optional drafter KV pool
+        self.token_hist = np.zeros((n_lanes, max_seq + 1), np.int32)
+        self.draft_model: Model | None = None
+        self.draft_cache: Any = None
         # persistent device mirrors, updated incrementally
         self._dev: dict[str, Any] = {}
-        self._dirty = {"tables", "positions", "last_tokens"}
+        self._dirty = {"tables", "positions", "last_tokens", "hist"}
 
     # -- device mirrors ----------------------------------------------------
     def _host_of(self, name: str):
         return {"tables": self.block_tables, "positions": self.lengths,
-                "last_tokens": self.last_tokens}[name]
+                "last_tokens": self.last_tokens,
+                "hist": self.token_hist}[name]
 
     def _device(self, name: str) -> jnp.ndarray:
         if name in self._dirty or name not in self._dev:
@@ -433,3 +445,50 @@ class PagedCachePool:
     def set_last_token(self, lane: int, tok: int) -> None:
         self.last_tokens[lane] = tok
         self._touch_item("last_tokens", lane)
+
+    # -- speculative decode: sequence history + drafter KV ------------------
+    def hist_dev(self) -> jnp.ndarray:
+        """Per-lane sequence history, device-resident (B, max_seq + 1)."""
+        return self._device("hist")
+
+    def set_hist(self, lane: int, tokens: list) -> None:
+        """Install a lane's known sequence tokens (the prefill context).
+        The fused spec loop appends emissions on device and hands the
+        result back via ``adopt_device('hist', ...)``."""
+        row = np.zeros(self.token_hist.shape[1], np.int32)
+        row[: len(tokens)] = tokens
+        self.token_hist[lane] = row
+        if "hist" in self._dev and "hist" not in self._dirty:
+            self._dev["hist"] = _dev_set_row(
+                self._dev["hist"], lane, jnp.asarray(row, jnp.int32))
+        else:
+            self._dirty.add("hist")
+
+    def set_hist_token(self, lane: int, pos: int, tok: int) -> None:
+        self.token_hist[lane, pos] = tok
+        if "hist" in self._dev and "hist" not in self._dirty:
+            self._dev["hist"] = _dev_set_cell(self._dev["hist"], lane, pos,
+                                              tok)
+        else:
+            self._dirty.add("hist")
+
+    def attach_draft(self, model: Model, dtype=jnp.bfloat16) -> None:
+        """Allocate a drafter KV pool with the SAME block geometry, so the
+        drafter rides this pool's block tables and allocator: every block
+        id resolves to the request's slots in both caches at once."""
+        self.draft_model = model
+        self.draft_cache = model.init_paged_cache(self.n_blocks,
+                                                  self.block_size, dtype)
+
+    def detach_draft(self) -> None:
+        self.draft_model = None
+        self.draft_cache = None
+
+    def insert_draft(self, req_id: int, prefill_cache: Any, row: int,
+                     prompt_len: int) -> None:
+        """Scatter the DRAFTER's prefill KV for an already-admitted
+        request into the drafter pool at the request's existing blocks."""
+        blks = self.blocks_of[req_id][: self.blocks_for(prompt_len)]
+        self.draft_cache = _paged_insert(self.draft_cache, prefill_cache,
+                                         jnp.asarray(blks, jnp.int32),
+                                         jnp.asarray(row, jnp.int32))

@@ -15,6 +15,12 @@ class Request:
     arrival_s: float = 0.0
     req_id: int = field(default_factory=lambda: next(_ids))
     eos_id: int | None = None
+    # sampling knobs: temperature <= 0 means exact greedy (argmax); top_k
+    # <= 0 disables top-k truncation; seed None derives a deterministic
+    # per-request seed from the engine seed + req_id (crc32 idiom)
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int | None = None
 
     # filled during serving
     first_token_s: float | None = None

@@ -291,8 +291,13 @@ def test_chunked_prefill_tbt_non_regression(tiny_model, tiny_params):
         eng.submit(Request(prompt=list(short), max_new_tokens=60))
         eng.step()
         victim = next(iter(eng.active.values()))
+        # anchor the stamp window *before* the long prompt goes in: the
+        # admission stall lands in the very first step, and np.diff
+        # discards everything before the first stamp, so without this
+        # anchor the monolithic stall would fall in a blind spot and the
+        # comparison would reduce to scheduler noise
+        stamps = [time.perf_counter()]
         eng.submit(Request(prompt=list(long_prompt), max_new_tokens=2))
-        stamps = []
         seen = len(victim.output)
         for _ in range(200):
             eng.step()

@@ -117,6 +117,45 @@ def test_paged_prefill_chunk_equals_decode_steps():
                                    np.asarray(o_one), atol=1e-5)
 
 
+@pytest.mark.parametrize("B,Q,H,K,D,bs,T", [
+    (2, 5, 8, 2, 64, 16, 8),   # GQA 4:1, K=4 speculation (Q = K + 1)
+    (1, 2, 4, 4, 64, 16, 4),   # MHA, K=1
+    (3, 5, 4, 1, 32, 8, 8),    # MQA
+])
+def test_paged_verify_matches_ref(B, Q, H, K, D, bs, T):
+    """Speculative verify: Q candidate queries per lane, query i at
+    absolute position positions[b] + i, against the mask-walk oracle."""
+    rng = np.random.default_rng(B * 1000 + Q)
+    n_blocks = 1 + B * T
+    kp, vp = arr(rng, n_blocks, bs, K, D), arr(rng, n_blocks, bs, K, D)
+    q = arr(rng, B, Q, H, D)
+    pos = jnp.asarray(rng.integers(0, T * bs - Q, B), jnp.int32)
+    bt = jnp.asarray(rng.permutation(np.arange(1, n_blocks))
+                     [: B * T].reshape(B, T), jnp.int32)
+    o = ops.paged_verify_attention(q, kp, vp, bt, pos)
+    o_ref = ref.paged_verify_attention_ref(q, kp, vp, bt, pos)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=1e-5)
+
+
+def test_paged_verify_equals_decode_steps():
+    """Verify query i == one decode step at positions + i with the KV
+    already in place: the multi-query pass and the sequential chain see
+    the same causal context."""
+    rng = np.random.default_rng(7)
+    B, Q, H, K, D, bs, T = 2, 5, 4, 2, 32, 8, 4
+    n_blocks = 1 + B * T
+    kp, vp = arr(rng, n_blocks, bs, K, D), arr(rng, n_blocks, bs, K, D)
+    q = arr(rng, B, Q, H, D)
+    pos = jnp.asarray([6, 13], jnp.int32)
+    bt = jnp.asarray(rng.permutation(np.arange(1, n_blocks))
+                     .reshape(B, T), jnp.int32)
+    o = ops.paged_verify_attention(q, kp, vp, bt, pos)
+    for i in range(Q):
+        o_one = ops.paged_decode_attention(q[:, i], kp, vp, bt, pos + i)
+        np.testing.assert_allclose(np.asarray(o[:, i]), np.asarray(o_one),
+                                   atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # PagedCachePool allocator invariants
 # ---------------------------------------------------------------------------

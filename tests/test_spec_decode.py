@@ -1,0 +1,332 @@
+"""Speculative decoding + on-device sampling: greedy bit-parity vs the
+fused horizon path, rejection-sampling distribution correctness, pool /
+history invariants across rejected tails, drafter lifecycle, and the
+per-request deterministic RNG seeding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model, local_plan
+from repro.models.transformer import (lane_keys, ngram_propose,
+                                      rejection_choose, sampling_dist)
+from repro.serving import Engine, EngineKnobs, Request
+from repro.serving.backend import EngineBackend
+
+# whole-module: live jitted engines + PRNG sweeps (CI sim job)
+pytestmark = pytest.mark.slow
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("llama2-7b").smoke_config()
+    return build_model(cfg, local_plan(param_dtype=jnp.bfloat16))
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_model):
+    return tiny_model.init(jax.random.PRNGKey(0))
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("n_slots", 3)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("paged", True)
+    kw.setdefault("knobs", EngineKnobs(max_batch=kw["n_slots"]))
+    return Engine(model, params, **kw)
+
+
+def _submit_load(eng, vocab, *, n_req=5, max_new=12, seed=0, stagger=2,
+                 temperature=0.0, top_k=0, seeds=None):
+    rng = np.random.default_rng(seed)
+    for i in range(n_req):
+        plen = int(rng.integers(4, 20))
+        eng.submit(Request(
+            prompt=[int(t) for t in rng.integers(0, vocab, plen)],
+            max_new_tokens=max_new + stagger * i, temperature=temperature,
+            top_k=top_k, seed=None if seeds is None else seeds[i]))
+
+
+def _streams(stats):
+    return [tuple(r.output) for r in sorted(stats.completed,
+                                            key=lambda r: r.req_id)]
+
+
+# ---------------------------------------------------------------------------
+# rejection sampling: the emitted-token marginal equals the target dist
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec_k", [1, 4])
+def test_rejection_sampling_matches_target_dist(spec_k):
+    """Slot-0 emitted-token marginal == target p exactly (the losslessness
+    theorem), measured over many lanes with q deliberately far from p."""
+    V, B = 8, 16384
+    rng = np.random.default_rng(42)
+    p0 = rng.dirichlet(np.full(V, 0.6), size=spec_k + 1).astype(np.float32)
+    q0 = rng.dirichlet(np.full(V, 0.6), size=spec_k).astype(np.float32)
+    p = jnp.broadcast_to(jnp.asarray(p0), (B, spec_k + 1, V))
+    q = jnp.broadcast_to(jnp.asarray(q0), (B, spec_k, V))
+    # drafts ~ q, drawn independently of the accept/bonus key stream
+    drafts = jnp.asarray(
+        np.stack([rng.choice(V, size=B, p=q0[j] / q0[j].sum())
+                  for j in range(spec_k)], axis=1), jnp.int32)
+    base = lane_keys(jnp.arange(B, dtype=jnp.int32))
+    n_acc, cand = rejection_choose(
+        base, jnp.zeros(B, jnp.int32), drafts, q, p,
+        jnp.zeros(B, bool), jnp.full(B, spec_k + 1, jnp.int32))
+    emitted0 = np.asarray(cand[:, 0])
+    freq = np.bincount(emitted0, minlength=V) / B
+    tv_p = 0.5 * np.abs(freq - p0[0]).sum()
+    tv_q = 0.5 * np.abs(freq - q0[0]).sum()
+    assert tv_p < 0.03                       # matches the target...
+    assert tv_q > 0.1                        # ...and NOT the proposer
+    assert 0 < int(np.asarray(n_acc).sum()) < B * spec_k  # mixed outcomes
+
+
+def test_rejection_sampling_greedy_degenerates_to_argmax():
+    """One-hot dists: accept iff draft == argmax p, and every corrected /
+    bonus slot IS the argmax — no randomness survives at temperature 0."""
+    V, B, K = 8, 64, 3
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.standard_normal((B, K + 1, V)), jnp.float32)
+    zeros = jnp.zeros((B, K + 1))
+    p = sampling_dist(logits, zeros, jnp.zeros((B, K + 1), jnp.int32))
+    am = np.asarray(jnp.argmax(logits, axis=-1))
+    drafts = jnp.asarray(np.where(rng.random((B, K)) < 0.5, am[:, :K],
+                                  (am[:, :K] + 1) % V), jnp.int32)
+    q = jax.nn.one_hot(drafts, V, dtype=jnp.float32)
+    n_acc, cand = rejection_choose(
+        lane_keys(jnp.arange(B, dtype=jnp.int32)), jnp.zeros(B, jnp.int32),
+        drafts, q, p, jnp.ones(B, bool), jnp.full(B, K + 1, jnp.int32))
+    n_acc, cand = np.asarray(n_acc), np.asarray(cand)
+    match = np.asarray(drafts) == am[:, :K]
+    expect_acc = np.cumprod(match, axis=1).sum(axis=1)
+    np.testing.assert_array_equal(n_acc, expect_acc)
+    for b in range(B):
+        for j in range(n_acc[b], K + 1):     # rejected + bonus slots
+            assert cand[b, j] == am[b, j]
+
+
+def test_ngram_propose_prompt_lookup():
+    """The bigram suffix match proposes the continuation of the most
+    recent earlier occurrence; no match repeats the last token."""
+    hist = jnp.asarray([[7, 8, 9, 1, 2, 5, 6, 1, 2, 0, 0, 0],
+                        [3, 3, 3, 3, 3, 3, 3, 3, 4, 0, 0, 0]], jnp.int32)
+    pos = jnp.asarray([8, 8], jnp.int32)     # suffixes (1, 2) and (3, 4)
+    drafts = np.asarray(ngram_propose(hist, pos, k=3, n=2))
+    # row 0: (1, 2) last occurred at 3..4 -> continuation 5, 6, 1
+    np.testing.assert_array_equal(drafts[0], [5, 6, 1])
+    # row 1: (3, 4) never occurred before -> repeat hist[pos] = 4
+    np.testing.assert_array_equal(drafts[1], [4, 4, 4])
+
+
+# ---------------------------------------------------------------------------
+# engine: greedy bit-parity with speculation on
+# ---------------------------------------------------------------------------
+
+def test_spec_ngram_greedy_streams_identical(tiny_model, tiny_params):
+    """ngram speculation at K=4: exactly the plain fused-horizon streams
+    (greedy parity is bitwise — the verify pass folds the candidates into
+    the decode-step batch axis), with fewer decode syncs."""
+    vocab = tiny_model.cfg.vocab_size
+    base = _engine(tiny_model, tiny_params, horizon=8)
+    _submit_load(base, vocab)
+    st0 = base.run()
+    spec = _engine(tiny_model, tiny_params, horizon=8, draft="ngram",
+                   spec_k=4)
+    _submit_load(spec, vocab)
+    st1 = spec.run()
+    assert _streams(st0) == _streams(st1)
+    assert st1.verify_passes > 0
+    assert st1.draft_tokens == 4 * st1.verify_passes
+    assert 0 < st1.accepted_tokens <= st1.draft_tokens
+    assert st1.accepted_per_sync > 0
+    assert spec.pool.used_blocks == 0        # everything reclaimed
+
+
+def test_spec_model_drafter_greedy_streams_identical(tiny_model,
+                                                     tiny_params):
+    """A registered model drafter (here: the target itself, the ideal
+    proposer) still reproduces the plain streams bit-exactly, and accepts
+    nearly everything."""
+    vocab = tiny_model.cfg.vocab_size
+    base = _engine(tiny_model, tiny_params, horizon=8)
+    _submit_load(base, vocab, n_req=3)
+    st0 = base.run()
+    spec = _engine(tiny_model, tiny_params, horizon=8, spec_k=2)
+    spec.add_drafter("self", tiny_model, tiny_params)
+    spec.set_drafter("self")
+    _submit_load(spec, vocab, n_req=3)
+    st1 = spec.run()
+    assert _streams(st0) == _streams(st1)
+    # a perfect drafter: the only rejections are bonus-slot cutoffs
+    assert st1.accepted_tokens > 0.8 * st1.draft_tokens
+
+
+def test_spec_with_chunked_prefill_and_sharing(tiny_model, tiny_params):
+    """Speculation composes with chunked prefill + prefix sharing (the
+    draft cache rides the same block tables)."""
+    vocab = tiny_model.cfg.vocab_size
+    base = _engine(tiny_model, tiny_params, horizon=8)
+    _submit_load(base, vocab)
+    spec = _engine(tiny_model, tiny_params, horizon=8, draft="ngram",
+                   spec_k=4, prefix_share=True, prefill_chunk=16)
+    _submit_load(spec, vocab)
+    assert _streams(base.run()) == _streams(spec.run())
+
+
+def test_spec_respects_eos_and_budget(tiny_model, tiny_params):
+    """Mid-round finishes stop the emitted run on the right token even
+    when later slots were accepted."""
+    vocab = tiny_model.cfg.vocab_size
+    eng = _engine(tiny_model, tiny_params, horizon=8, draft="ngram",
+                  spec_k=4)
+    rng = np.random.default_rng(3)
+    prompt = [int(t) for t in rng.integers(0, vocab, 9)]
+    eng.submit(Request(prompt=list(prompt), max_new_tokens=10))
+    free = _streams(eng.run())[0]
+    assert len(free) == 10                   # budget exact
+    eos = free[4]
+    eng2 = _engine(tiny_model, tiny_params, horizon=8, draft="ngram",
+                   spec_k=4)
+    eng2.submit(Request(prompt=list(prompt), max_new_tokens=10, eos_id=eos))
+    got = _streams(eng2.run())[0]
+    assert got == free[: free.index(eos) + 1]
+
+
+# ---------------------------------------------------------------------------
+# pool / history invariants across rejected tails
+# ---------------------------------------------------------------------------
+
+def test_spec_pool_and_hist_invariants(tiny_model, tiny_params):
+    """Stepping a sampled spec engine (rejections guaranteed): lane
+    positions, the device mirrors and the token history stay consistent
+    with prompt + output after every scheduler step, and the pool drains
+    to zero blocks / zero refs."""
+    vocab = tiny_model.cfg.vocab_size
+    eng = _engine(tiny_model, tiny_params, horizon=4, draft="ngram",
+                  spec_k=4)
+    _submit_load(eng, vocab, temperature=0.9, top_k=0,
+                 seeds=[11, 12, 13, 14, 15])
+    steps = 0
+    while eng.queue or eng.active or eng.prefilling:
+        eng.step(now=float(steps))
+        steps += 1
+        assert steps < 200
+        pool = eng.pool
+        np.testing.assert_array_equal(np.asarray(pool.positions()),
+                                      pool.lengths)
+        np.testing.assert_array_equal(np.asarray(pool.tables()),
+                                      pool.block_tables)
+        for rid, req in eng.active.items():
+            lane = pool.lane_of[rid]
+            seq = list(req.prompt) + list(req.output)
+            assert pool.lengths[lane] == len(seq) - 1   # next-write slot
+            hist = np.asarray(pool.hist_dev())[lane]
+            np.testing.assert_array_equal(hist[: len(seq)], seq)
+    assert eng.pool.used_blocks == 0
+    assert (eng.pool.ref[1:] == 0).all()
+    assert eng.stats.accepted_tokens < eng.stats.draft_tokens  # rejections
+
+
+def test_per_request_seed_determinism(tiny_model, tiny_params):
+    """Same request seeds -> identical sampled streams on a fresh engine;
+    a different engine seed changes unseeded requests only."""
+    vocab = tiny_model.cfg.vocab_size
+
+    def run(engine_seed, req_seeds):
+        eng = _engine(tiny_model, tiny_params, horizon=8, draft="ngram",
+                      spec_k=4, seed=engine_seed)
+        _submit_load(eng, vocab, n_req=3, temperature=0.9, top_k=16,
+                     seeds=req_seeds)
+        return _streams(eng.run())
+
+    a = run(0, [101, 102, 103])
+    b = run(0, [101, 102, 103])
+    assert a == b                            # replay-stable
+    c = run(0, [101, 102, 999])
+    assert a[:2] == c[:2] and a[2] != c[2]   # seed isolates the stream
+    d = run(7, [None, None, None])
+    e = run(8, [None, None, None])
+    assert d != e                            # engine seed feeds the crc fold
+
+
+def test_mixed_batch_keeps_greedy_lanes_exact(tiny_model, tiny_params):
+    """A sampled request in the batch must not perturb its greedy
+    neighbours: temps land in the graph but greedy lanes still take the
+    exact argmax."""
+    vocab = tiny_model.cfg.vocab_size
+    base = _engine(tiny_model, tiny_params, horizon=8)
+    _submit_load(base, vocab, n_req=3)
+    st0 = base.run()
+    mix = _engine(tiny_model, tiny_params, horizon=8)
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        plen = int(rng.integers(4, 20))
+        mix.submit(Request(
+            prompt=[int(t) for t in rng.integers(0, vocab, plen)],
+            max_new_tokens=12 + 2 * i,
+            temperature=0.9 if i == 1 else 0.0, seed=5))
+    st1 = mix.run()
+    g0, g1 = _streams(st0), _streams(st1)
+    assert g0[0] == g1[0] and g0[2] == g1[2]
+
+
+# ---------------------------------------------------------------------------
+# drafter lifecycle
+# ---------------------------------------------------------------------------
+
+def test_drafter_swap_mid_flight(tiny_model, tiny_params):
+    """Swapping the proposer mid-run (ngram -> off -> model drafter) never
+    perturbs greedy output: proposal quality only moves throughput."""
+    vocab = tiny_model.cfg.vocab_size
+    base = _engine(tiny_model, tiny_params, horizon=4)
+    _submit_load(base, vocab, n_req=3, max_new=18)
+    st0 = base.run()
+    eng = _engine(tiny_model, tiny_params, horizon=4, draft="ngram",
+                  spec_k=2)
+    eng.add_drafter("self", tiny_model, tiny_params)
+    _submit_load(eng, vocab, n_req=3, max_new=18)
+    steps = 0
+    while eng.queue or eng.active or eng.prefilling:
+        if steps == 3:
+            eng.set_drafter(None)            # plain fused decode
+        if steps == 5:
+            eng.set_drafter("self")          # cold draft cache mid-flight
+        eng.step(now=float(steps))
+        steps += 1
+        assert steps < 200
+    assert _streams(eng.stats) == _streams(st0)
+    assert eng.pool.used_blocks == 0
+
+
+def test_drafter_pairing_validation(tiny_model, tiny_params):
+    """Mismatched vocab / non-paged drafters are rejected up front."""
+    from repro.configs import check_draft_pair, drafter_for, get_config
+    assert drafter_for("llama2-70b") == "llama2-7b"
+    with pytest.raises(ValueError, match="tokenizer"):
+        check_draft_pair(get_config("llama2-7b"), get_config("gemma-7b"))
+    with pytest.raises(ValueError, match="paged-servable"):
+        check_draft_pair(get_config("rwkv6-3b"), get_config("rwkv6-3b"))
+    eng = _engine(tiny_model, tiny_params, horizon=4)
+    with pytest.raises(KeyError):
+        eng.set_drafter("nope")
+
+
+def test_backend_drops_drafter_under_freq_cap(tiny_model, tiny_params):
+    """Speculation as a reconfigure axis: a deep frequency cap stashes the
+    drafter; lifting the cap restores it."""
+    from repro.core.profiles import ConfigPoint
+    eng = _engine(tiny_model, tiny_params, horizon=4, draft="ngram",
+                  spec_k=2)
+    bk = EngineBackend(eng, draft_min_freq=0.7)
+    lo = ConfigPoint(freq=0.5, tp=8, batch=16, size="7b", quant="bf16")
+    hi = ConfigPoint(freq=1.0, tp=8, batch=16, size="7b", quant="bf16")
+    bk.apply_config(lo)
+    assert eng.draft_name is None and bk.draft_drops == 1
+    bk.apply_config(lo)                      # idempotent while capped
+    assert bk.draft_drops == 1
+    bk.apply_config(hi)
+    assert eng.draft_name == "ngram" and bk._stashed_draft is None
