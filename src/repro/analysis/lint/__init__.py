@@ -1,0 +1,15 @@
+"""tapaslint — repo-specific static analysis for TAPAS invariants.
+
+Stdlib-only (the CI lint lane runs without jax/numpy installed): the
+runtime guards live in ``repro.analysis.lint.runtime`` and are imported
+separately by test code.
+"""
+from repro.analysis.lint.framework import (Finding, ModuleContext, Registry,
+                                           Rule, collect_files,
+                                           diff_baseline, format_baseline,
+                                           lint_sources, load_baseline)
+from repro.analysis.lint.rules import ALL_RULES, RULES_BY_CODE
+
+__all__ = ["Finding", "ModuleContext", "Registry", "Rule", "ALL_RULES",
+           "RULES_BY_CODE", "collect_files", "diff_baseline",
+           "format_baseline", "lint_sources", "load_baseline"]

@@ -1,0 +1,20 @@
+"""Rule registry: one instance per TL rule, in code order."""
+from repro.analysis.lint.rules.tl001_determinism import DeterminismRule
+from repro.analysis.lint.rules.tl002_host_sync import HostSyncRule
+from repro.analysis.lint.rules.tl003_retrace import RetraceRule
+from repro.analysis.lint.rules.tl004_dataclass_copy import DataclassCopyRule
+from repro.analysis.lint.rules.tl005_units import UnitSuffixRule
+from repro.analysis.lint.rules.tl006_protocol import ProtocolConformanceRule
+
+ALL_RULES = [
+    DeterminismRule(),
+    HostSyncRule(),
+    RetraceRule(),
+    DataclassCopyRule(),
+    UnitSuffixRule(),
+    ProtocolConformanceRule(),
+]
+
+RULES_BY_CODE = {r.code: r for r in ALL_RULES}
+
+__all__ = ["ALL_RULES", "RULES_BY_CODE"]

@@ -1,0 +1,83 @@
+"""TL002 — host-sync leak: no tracer-to-host coercion on the hot path."""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint.framework import Rule
+
+EXPLAIN = """\
+TL002 host-sync leak — device values must not be coerced to host scalars
+inside serving/model hot-path code.
+
+The decode hot path is engineered around ONE host sync per drained
+horizon (PR 3: 5.6x sync reduction); a single stray ``.item()`` /
+``float(tracer)`` / ``np.asarray(jit_output)`` re-serializes the device
+stream and silently costs the whole batch a round-trip — or, inside a
+traced function, raises ConcretizationError only on the untraced branch
+nobody tested.
+
+Flags, inside functions that run under a jax trace (``@jit``-decorated,
+passed to ``jax.jit``/``lax.scan``/``lax.cond``/..., named like a
+``decode_*``/``prefill_*``/kernel entry point, or nested in one):
+  * ``x.item()``, ``x.tolist()``;
+  * ``float(x)`` / ``int(x)`` / ``bool(x)`` on a non-constant argument;
+  * ``np.asarray(x)`` / ``np.array(x)`` — the result silently leaves the
+    traced graph;
+  * ``jax.device_get(x)``.
+
+Outside traced functions (engine scheduler code in ``serving/``), only
+``.item()``/``.tolist()`` are flagged: per-element readbacks hide in stats
+paths, whereas one batched ``np.asarray`` per horizon is the sanctioned
+sync idiom (and is counted in ``EngineStats.host_syncs``).
+
+Fix: keep the value on device (mask/where), or batch the readback at the
+horizon boundary and account it in ``stats.host_syncs``.  Genuinely cold
+readbacks can be annotated ``# tapaslint: disable=TL002``.
+"""
+
+_COERCERS = ("float", "int", "bool")
+
+
+class HostSyncRule(Rule):
+    code = "TL002"
+    name = "host-sync-leak"
+    scopes = ("src/repro/serving", "src/repro/models", "src/repro/kernels")
+    EXPLAIN = EXPLAIN
+
+    def check(self, ctx):
+        traced = ctx.traced_functions
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = ctx.enclosing_function(node)
+            in_trace = fn is not None and fn in traced
+            chain = ctx._call_chain(node.func)
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in ("item", "tolist") \
+                    and not node.args:
+                yield from self.emit(
+                    ctx, node,
+                    f".{node.func.attr}() forces a device->host sync per "
+                    "element; batch the readback (one np.asarray per "
+                    "horizon) and count it in stats.host_syncs")
+                continue
+            if not in_trace:
+                continue
+            if chain[-1:] == ["device_get"]:
+                yield from self.emit(
+                    ctx, node, "jax.device_get inside a traced function "
+                    "breaks out of the graph; return the value instead")
+            elif len(chain) == 2 and chain[0] in ("np", "numpy") \
+                    and chain[1] in ("asarray", "array"):
+                yield from self.emit(
+                    ctx, node,
+                    f"np.{chain[1]}() on a traced value concretizes it "
+                    "(host sync / ConcretizationError); use jnp inside "
+                    "traced code")
+            elif chain in (["float"], ["int"], ["bool"]) and node.args \
+                    and not isinstance(node.args[0], ast.Constant):
+                yield from self.emit(
+                    ctx, node,
+                    f"{chain[0]}() on a traced value concretizes it; keep "
+                    "it a jnp scalar (or read it back at the horizon "
+                    "boundary)")

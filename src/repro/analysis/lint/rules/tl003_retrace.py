@@ -1,0 +1,155 @@
+"""TL003 — retrace hazard: no per-call-varying shapes or Python branches
+on runtime values inside jitted code."""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint.framework import Rule
+
+EXPLAIN = """\
+TL003 retrace hazard — a jitted graph must be one graph.
+
+Motivating bug (PR 6): the fused decode horizon passed
+``num_steps=min(horizon, max_remaining_budget)`` as a jit static arg; the
+shrinking tail re-specialized (recompiled) the whole scan mid-measurement,
+so step-time benches measured the compiler, not the model.  Fixed by
+always launching ``horizon`` steps and parking drained rounds on device
+with ``lax.cond``.
+
+Flags:
+  * Python ``if``/``while`` inside a traced function whose test reads a
+    runtime parameter of that function (branching on a tracer either
+    raises ConcretizationError or — when the value is concrete at trace
+    time, e.g. a shape-dependent int — bakes a per-call specialization).
+    Tests on statics (``self``/``cfg``/``params``/``num_steps``/...),
+    ``x is None`` checks, ``isinstance`` checks and ``len(...)``/
+    ``.shape``/``.ndim``/``.dtype`` probes are allowed: those are
+    trace-time constants.
+  * call sites of jitted entry points (``self._*_jit(...)``) passing a
+    *computed* expression (min/max/arithmetic/len) to a known static
+    kwarg (``num_steps``/``max_len``/``spec_k``/``ngram``/``horizon``):
+    each distinct value is a fresh compile — pass a stable knob and mask
+    the tail on device instead.
+
+Fix: replace the Python branch with ``jnp.where``/``lax.cond``, and pin
+static kwargs to engine-lifetime constants.
+"""
+
+#: statics commonly threaded through this repo's traced functions
+_STATIC_NAMES = {"self", "cls", "cfg", "plan", "params", "config",
+                 "num_steps", "max_len", "spec_k", "ngram", "horizon",
+                 "block_size", "kwargs", "kw"}
+_STATIC_KWARGS = {"num_steps", "max_len", "spec_k", "ngram", "horizon"}
+_STATIC_PROBES = {"shape", "ndim", "dtype", "size"}
+
+
+class RetraceRule(Rule):
+    code = "TL003"
+    name = "retrace-hazard"
+    scopes = ("src/repro/serving", "src/repro/models", "src/repro/kernels")
+    EXPLAIN = EXPLAIN
+
+    def check(self, ctx):
+        traced = ctx.traced_functions
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.If, ast.While)):
+                fn = ctx.enclosing_function(node)
+                if fn is None or fn not in traced:
+                    continue
+                name = self._runtime_name_in_test(node.test, fn)
+                if name is not None:
+                    kind = "while" if isinstance(node, ast.While) else "if"
+                    yield from self.emit(
+                        ctx, node,
+                        f"Python `{kind}` on runtime value '{name}' inside "
+                        "a traced function retraces per value (or raises "
+                        "on a tracer); use jnp.where / lax.cond")
+            elif isinstance(node, ast.Call):
+                yield from self._check_static_kwargs(ctx, node)
+
+    # -- data-dependent branch test ---------------------------------------
+    @classmethod
+    def _runtime_name_in_test(cls, test: ast.AST, fn) -> str | None:
+        """First runtime (non-static) parameter of ``fn`` the test reads
+        outside an allowed probe context, or None."""
+        a = fn.args
+        all_params = a.posonlyargs + a.args + a.kwonlyargs
+        params = {x.arg for x in all_params}
+        if a.vararg:
+            params.add(a.vararg.arg)
+        # params annotated as Python scalars (bool/int/float/str) are
+        # trace-time statics by repo convention (static_argnames /
+        # closure flags like `causal: bool`); runtime values are arrays
+        static_annotated = set()
+        for x in all_params:
+            if x.annotation is not None:
+                try:
+                    ann = ast.unparse(x.annotation)
+                except Exception:  # pragma: no cover
+                    ann = ""
+                if ann.split("|")[0].strip() in ("bool", "int", "float",
+                                                 "str"):
+                    static_annotated.add(x.arg)
+        runtime = params - _STATIC_NAMES - static_annotated
+        if not runtime:
+            return None
+        # `x is None` / `x is not None` / isinstance(...) guards are
+        # trace-time structure checks, not value branches
+        if isinstance(test, ast.Compare) and len(test.ops) == 1 \
+                and isinstance(test.ops[0], (ast.Is, ast.IsNot)):
+            return None
+        if isinstance(test, ast.Call):
+            chain_last = test.func.attr \
+                if isinstance(test.func, ast.Attribute) else \
+                (test.func.id if isinstance(test.func, ast.Name) else "")
+            if chain_last in ("isinstance", "hasattr", "callable"):
+                return None
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            return cls._runtime_name_in_test(test.operand, fn)
+        if isinstance(test, ast.BoolOp):
+            for v in test.values:
+                hit = cls._runtime_name_in_test(v, fn)
+                if hit is not None:
+                    return hit
+            return None
+        allowed: set[int] = set()
+        for sub in ast.walk(test):
+            # len(x), x.shape/.ndim/.dtype/.size: static under trace
+            if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) \
+                    and sub.func.id == "len":
+                allowed.update(id(n) for n in ast.walk(sub))
+            elif isinstance(sub, ast.Attribute) \
+                    and sub.attr in _STATIC_PROBES:
+                allowed.update(id(n) for n in ast.walk(sub))
+        for sub in ast.walk(test):
+            if isinstance(sub, ast.Name) and sub.id in runtime \
+                    and id(sub) not in allowed:
+                return sub.id
+        return None
+
+    # -- per-call-varying static kwargs at jit call sites ------------------
+    def _check_static_kwargs(self, ctx, node: ast.Call):
+        if not isinstance(node.func, ast.Attribute) \
+                or not node.func.attr.endswith("_jit"):
+            return
+        for kw in node.keywords:
+            if kw.arg not in _STATIC_KWARGS:
+                continue
+            if self._varies_per_call(kw.value):
+                yield from self.emit(
+                    ctx, node,
+                    f"static kwarg {kw.arg}= computed per call "
+                    f"({ast.unparse(kw.value)}): every distinct value "
+                    "recompiles the graph mid-run (the PR 6 shrinking-"
+                    "tail bug); pass a stable knob and mask the tail "
+                    "on device")
+
+    @staticmethod
+    def _varies_per_call(value: ast.AST) -> bool:
+        """A computed expression (min/len/arithmetic) rather than a
+        constant, plain name, or attribute read."""
+        if isinstance(value, (ast.Constant, ast.Name)):
+            return False
+        if isinstance(value, ast.Attribute):
+            return False                       # self.horizon etc.
+        return True

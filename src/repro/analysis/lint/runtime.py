@@ -1,0 +1,126 @@
+"""Runtime teeth for the tapaslint invariants.
+
+The static rules (TL002 host-sync, TL003 retrace) catch the *shapes* of
+hot-path bugs; this module catches the *behavior* at test time:
+
+* :func:`no_implicit_transfers` — ``jax.transfer_guard("disallow")``.
+  Any host value (Python scalar, list, np array) flowing implicitly into
+  jitted code raises.  Explicit ``jax.device_put`` / ``np.asarray`` of a
+  device array stay sanctioned, so the engine's one-per-horizon readback
+  and the kvcache's ``_dev_i32`` uploads pass while an accidental
+  per-step upload trips.  (On the CPU backend device-to-host is
+  zero-copy and unguarded; host-to-device still trips, which is the
+  direction per-step leaks take.)
+* :func:`no_leaked_tracers` — ``jax.checking_leaks()``: a tracer
+  escaping its trace (stashed on ``self``, returned through a closure)
+  raises at the leak site instead of as a deferred ConcretizationError.
+* :func:`hot_path_guard` — both at once; what the marked kernel /
+  engine-hot-path test modules run under (see ``tests/conftest.py``).
+* :func:`retrace_budget` — asserts the jit compile-cache grew by at most
+  ``budget`` entries across a region (the PR 6 shrinking-tail bug
+  recompiled the fused scan every round; budget 0 over a drained run is
+  the regression fence).
+
+Unlike the rest of ``repro.analysis.lint`` (stdlib-only so the CI lint
+lane can run it without jax), this module imports jax and is imported
+separately, by tests.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, Iterator
+
+import jax
+import numpy as np
+
+__all__ = ["no_implicit_transfers", "no_leaked_tracers", "hot_path_guard",
+           "sanctioned_readback", "cache_size", "jit_entries",
+           "retrace_budget"]
+
+
+@contextlib.contextmanager
+def no_implicit_transfers() -> Iterator[None]:
+    """Raise on any implicit host<->device transfer inside the block."""
+    with jax.transfer_guard("disallow"):
+        yield
+
+
+@contextlib.contextmanager
+def no_leaked_tracers() -> Iterator[None]:
+    """Raise at the leak site if a tracer escapes its trace."""
+    with jax.checking_leaks():
+        yield
+
+
+@contextlib.contextmanager
+def hot_path_guard() -> Iterator[None]:
+    """Transfer guard + leak check: the full hot-path discipline."""
+    with jax.checking_leaks(), jax.transfer_guard("disallow"):
+        yield
+
+
+def sanctioned_readback(x: Any) -> np.ndarray:
+    """Deliberate device->host sync, exempt from an enclosing guard.
+
+    The serving engine budgets exactly one readback per fused horizon
+    (``EngineStats.host_syncs``); code making that sanctioned sync under
+    a guard routes it through here so the guard keeps teeth everywhere
+    else.
+    """
+    with jax.transfer_guard("allow"):
+        return np.asarray(jax.device_get(x))
+
+
+def cache_size(fn: Any) -> int | None:
+    """Compile-cache entry count of a jitted callable (None if the
+    jax version does not expose it — the budget check then skips)."""
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        return None
+    try:
+        return int(probe())
+    except Exception:  # pragma: no cover - defensive against jax churn
+        return None
+
+
+def jit_entries(obj: Any) -> dict[str, Any]:
+    """The live jitted entry points of an object, by attribute name.
+
+    The serving engine binds its compiled functions as ``*_jit``
+    attributes; this collects the non-None ones so a test can fence all
+    of them at once: ``retrace_budget(*jit_entries(eng).values())``.
+    """
+    out: dict[str, Any] = {}
+    for name in dir(obj):
+        if not name.endswith("_jit"):
+            continue
+        fn = getattr(obj, name)
+        if fn is not None and hasattr(fn, "_cache_size"):
+            out[name] = fn
+    return out
+
+
+@contextlib.contextmanager
+def retrace_budget(*jitted: Any, budget: int = 0,
+                   names: Callable[[Any], str] = repr) -> Iterator[None]:
+    """Assert each jitted callable compiles at most ``budget`` new graphs
+    inside the block.
+
+    Run warmup (one call per live shape bucket) *before* entering; a
+    steady-state region should then hold at delta 0.  A positive delta
+    means some call argument re-specialized the graph mid-run — the
+    exact failure mode the fused decode horizon had in PR 6.
+    """
+    before = [cache_size(f) for f in jitted]
+    yield
+    over = []
+    for f, b in zip(jitted, before):
+        a = cache_size(f)
+        if b is None or a is None:
+            continue
+        if a - b > budget:
+            over.append(f"{names(f)}: +{a - b} compiles (budget {budget})")
+    if over:
+        raise AssertionError(
+            "retrace budget exceeded — a static argument or shape varied "
+            "per call inside the fenced region:\n  " + "\n  ".join(over))

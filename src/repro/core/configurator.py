@@ -61,7 +61,7 @@ class InstanceConfigurator:
         if choice is None and emergency:
             # deepest emergency: any quality, minimum power point
             feas = [e for e in self.entries
-                    if e.power <= power_cap and e.temp <= temp_cap]
+                    if e.power_frac <= power_cap and e.temp_frac <= temp_cap]
             choice = max(feas, key=lambda e: e.goodput) if feas else None
         if choice is None:
             return st  # nothing fits: capping layer will handle it

@@ -8,7 +8,7 @@ aisle airflow).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
@@ -90,18 +90,14 @@ class Datacenter:
 def scale_datacenter(cfg: DCConfig, oversub: float) -> DCConfig:
     """Add racks into existing rows (paper §4.4): +oversub fraction servers
     without changing provisioned cooling/power (they were sized for the
-    original occupancy)."""
+    original occupancy).  ``dataclasses.replace`` keeps the copy total —
+    the hand-rolled field list here once dropped the provision fractions
+    (tapaslint TL004)."""
     extra = int(round(cfg.racks_per_row * oversub))
-    return DCConfig(
-        n_rows=cfg.n_rows,
+    shrink = cfg.racks_per_row / (cfg.racks_per_row + extra)
+    return replace(
+        cfg,
         racks_per_row=cfg.racks_per_row + extra,
-        servers_per_rack=cfg.servers_per_rack,
-        hw=cfg.hw, seed=cfg.seed,
-        power_headroom=cfg.power_headroom * cfg.racks_per_row
-        / (cfg.racks_per_row + extra),
-        airflow_headroom=cfg.airflow_headroom * cfg.racks_per_row
-        / (cfg.racks_per_row + extra),
-        power_provision_frac=cfg.power_provision_frac,
-        airflow_provision_frac=cfg.airflow_provision_frac,
-        ahus_per_aisle=cfg.ahus_per_aisle, region=cfg.region,
+        power_headroom=cfg.power_headroom * shrink,
+        airflow_headroom=cfg.airflow_headroom * shrink,
     )

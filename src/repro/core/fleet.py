@@ -72,6 +72,14 @@ class RegionSpec:
     carbon_scale: float = 1.0     # grid dirtiness vs the fleet-mean grid
     weather: tuple = ()           # WeatherShift schedule for this region
     trace_namespace: str | None = None
+    # custom region control plane, forwarded to SimConfig.control: a
+    # ControlPolicy instance or a zero-arg factory.  Prefer a factory —
+    # an instance shared across regions (or runs) carries its state with
+    # it.  None -> built from the fleet-wide ``policy`` flags.
+    control: object | None = None
+    # forwarded to SimConfig.iaas_only_capping (None derives from the
+    # fleet ``policy`` flags; set when driving a custom ``control``)
+    iaas_only_capping: bool | None = None
 
     def __post_init__(self):
         if not isinstance(self.name, str) or not self.name:
@@ -493,7 +501,7 @@ class FleetResult:
             "thermal_events": th,
             "power_events": pw,
             "throttle_events": th + pw,
-            "max_temp_c": max(float(r.max_gpu_temp.max())
+            "max_temp_c": max(float(r.max_gpu_temp_c.max())
                               for r in self.regions.values()),
             "unserved_frac": self.unserved_frac,
             "mean_quality": self.mean_quality,
@@ -541,11 +549,18 @@ class FleetSim:
                 tuple(replace(w, region=None) for w in spec.weather))
             ns = spec.name if spec.trace_namespace is None \
                 else spec.trace_namespace
+            # total construction: every SimConfig field is carried
+            # explicitly — an omitted field silently reverts to its
+            # default (tapaslint TL004, the scale_datacenter bug class)
             self.sims[spec.name] = ClusterSim(SimConfig(
                 dc=spec.dc, horizon_h=cfg.horizon_h, tick_min=cfg.tick_min,
                 saas_fraction=cfg.saas_fraction, seed=cfg.seed,
                 policy=cfg.policy, scenario=regional,
+                failures=(),               # legacy channel; region-scoped
+                #                            failures ride the scenario
                 occupancy=cfg.occupancy, demand_scale=cfg.demand_scale,
+                control=spec.control,
+                iaas_only_capping=spec.iaas_only_capping,
                 region_name=spec.name, trace_namespace=ns))
         first = next(iter(self.sims.values()))
         self.ticks = first.ticks

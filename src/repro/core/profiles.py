@@ -68,9 +68,9 @@ class ConfigPoint:
 @dataclass(frozen=True)
 class ProfileEntry:
     cfg: ConfigPoint
-    goodput: float     # tokens/s, normalized
-    power: float       # fraction of server TDP
-    temp: float        # hottest-chip util-equivalent in [0,1]
+    goodput: float      # tokens/s, normalized
+    power_frac: float   # fraction of server TDP
+    temp_frac: float    # hottest-chip util-equivalent in [0,1]
     quality: float
 
 
@@ -98,8 +98,8 @@ def _entry(c: ConfigPoint) -> ProfileEntry:
     power = chips_frac * per_chip * qpow
     temp = min(per_chip * qpow, 1.35)
     quality = max(qual + qqual, 0.0)
-    return ProfileEntry(c, goodput=goodput, power=min(power, 1.0),
-                        temp=temp, quality=quality)
+    return ProfileEntry(c, goodput=goodput, power_frac=min(power, 1.0),
+                        temp_frac=temp, quality=quality)
 
 
 def build_profile() -> list:
@@ -116,10 +116,10 @@ def pareto_frontier(entries: list) -> list:
     front = []
     for e in entries:
         dominated = any(
-            (o.goodput >= e.goodput and o.power <= e.power
-             and o.temp <= e.temp and o.quality >= e.quality
-             and (o.goodput, -o.power, -o.temp, o.quality)
-             != (e.goodput, -e.power, -e.temp, e.quality))
+            (o.goodput >= e.goodput and o.power_frac <= e.power_frac
+             and o.temp_frac <= e.temp_frac and o.quality >= e.quality
+             and (o.goodput, -o.power_frac, -o.temp_frac, o.quality)
+             != (e.goodput, -e.power_frac, -e.temp_frac, e.quality))
             for o in entries)
         if not dominated:
             front.append(e)
@@ -138,7 +138,7 @@ def best_config(entries: list, *, power_cap: float, temp_cap: float,
     is how emergencies push load onto smaller/quantized variants (quality
     cost) instead of dropping throughput (paper §5.4)."""
     feasible = [e for e in entries
-                if e.power <= power_cap + 1e-9 and e.temp <= temp_cap + 1e-9
+                if e.power_frac <= power_cap + 1e-9 and e.temp_frac <= temp_cap + 1e-9
                 and e.quality >= min_quality - 1e-9]
     if not feasible:
         return None
@@ -295,7 +295,7 @@ def measure_from_engine(*, arch: str = "llama2-7b",
         per_chip = _per_chip_power(util, c.freq)   # measured points run tp=8
         entries.append(ProfileEntry(
             c, goodput=r["tok_per_s"] / max(best, 1e-9),
-            power=min(per_chip, 1.0), temp=min(per_chip, 1.35),
+            power_frac=min(per_chip, 1.0), temp_frac=min(per_chip, 1.35),
             quality=qual))
     return MeasuredProfile(rows=rows, entries=entries,
                            calibration=calibration)

@@ -111,7 +111,7 @@ def server_risk(dc: Datacenter, thermal: ThermalModel, power: PowerModel, *,
     a_air = dc.aisle_sum(np.where(kind > 0, air, 0.0))
     n_per_aisle = dc.aisle_sum((kind > 0).astype(float))
     a_head = (prov_aisle_cfm - a_air) / np.maximum(
-        n_per_aisle * th.airflow_max, 1.0)
+        n_per_aisle * th.airflow_max_cfm, 1.0)
     a_risk = np.clip(knobs.air_headroom_margin - a_head, 0.0, 1.0)[dc.aisle_of]
     return np.maximum.reduce([t_risk, p_risk, a_risk])
 

@@ -134,7 +134,7 @@ class RoutingPolicy:
             cap = (0.0 if inst.paused else
                    (e.goodput / state.nominal.goodput) * state.freq_cap[srv])
             if self.thermal_aware and cap > 0:
-                busy_max = min(state.u_max[srv] / max(e.temp, 1e-6), 1.0)
+                busy_max = min(state.u_max[srv] / max(e.temp_frac, 1e-6), 1.0)
                 cap *= busy_max
             caps.append(cap)
             quals.append(e.quality)

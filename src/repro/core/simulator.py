@@ -108,7 +108,7 @@ class SimConfig:
 @dataclass
 class SimResult:
     time_h: np.ndarray
-    max_gpu_temp: np.ndarray         # (T,)
+    max_gpu_temp_c: np.ndarray         # (T,)
     peak_row_power_frac: np.ndarray  # (T,) hottest row / provisioned
     thermal_events: int
     power_events: int
@@ -124,8 +124,8 @@ class SimResult:
     def summary(self) -> dict:
         return {
             "energy_kwh": self.energy_kwh,
-            "max_temp_c": float(self.max_gpu_temp.max()),
-            "p99_temp_c": float(np.quantile(self.max_gpu_temp, 0.99)),
+            "max_temp_c": float(self.max_gpu_temp_c.max()),
+            "p99_temp_c": float(np.quantile(self.max_gpu_temp_c, 0.99)),
             "peak_row_power_frac": float(self.peak_row_power_frac.max()),
             "thermal_events": self.thermal_events,
             "power_events": self.power_events,
@@ -476,9 +476,9 @@ class ClusterSim:
             cap = (e.goodput / self.nominal.goodput) * freq_cap[srv]
             busy = min(saas_load[srv] / max(cap, 1e-9), 1.0)
             tp = e.cfg.tp
-            # e.temp is the per-active-chip utilization-equivalent of
+            # e.temp_frac is the per-active-chip utilization-equivalent of
             # this config at full busy (work concentrates at low TP)
-            chip_util[srv, :tp] = min(busy * e.temp, 1.0)
+            chip_util[srv, :tp] = min(busy * e.temp_frac, 1.0)
         chip_util = np.clip(chip_util, 0.0, 1.0)
 
         # -- physics -----------------------------------------------
@@ -491,7 +491,7 @@ class ClusterSim:
                                          cooling_derate=state.cooling_extra_c))
         t_gpu = np.array(th.gpu_temp(inlet, chip_util))
         air = np.asarray(th.airflow(chip_util.mean(axis=1)))
-        air = np.where(kind > 0, air, th.airflow_idle * 0.5)
+        air = np.where(kind > 0, air, th.airflow_idle_cfm * 0.5)
         a_air = dc.aisle_sum(air)
 
         # heat recirculation: aisles over provisioned airflow push inlet
@@ -674,7 +674,7 @@ class ClusterSim:
         occupied_ticks = max(self._occupied_acc, 1)
         return SimResult(
             time_h=self.t_h[:self.tick],
-            max_gpu_temp=self._max_temp[:self.tick],
+            max_gpu_temp_c=self._max_temp[:self.tick],
             peak_row_power_frac=self._peak_row[:self.tick],
             thermal_events=self._th_events,
             power_events=self._pw_events,

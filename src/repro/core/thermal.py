@@ -40,8 +40,8 @@ class ThermalModel:
     load_coeff: jnp.ndarray      # (S,) °C at full DC load (Fig. 5: ~2)
     gpu_alpha: jnp.ndarray       # (S, 8) °C per unit chip util
     gpu_beta: jnp.ndarray        # (S, 8) static offset
-    airflow_idle: float
-    airflow_max: float
+    airflow_idle_cfm: float
+    airflow_max_cfm: float
     gpu_limit: float
 
     # ------------------------------------------------------------------
@@ -79,8 +79,8 @@ class ThermalModel:
             load_coeff=jnp.asarray(load_coeff),
             gpu_alpha=jnp.asarray(gpu_alpha),
             gpu_beta=jnp.asarray(gpu_beta),
-            airflow_idle=cfg.hw.airflow_idle_cfm,
-            airflow_max=cfg.hw.airflow_max_cfm,
+            airflow_idle_cfm=cfg.hw.airflow_idle_cfm,
+            airflow_max_cfm=cfg.hw.airflow_max_cfm,
             gpu_limit=cfg.hw.gpu_temp_limit_c,
         )
 
@@ -103,8 +103,8 @@ class ThermalModel:
 
     def airflow(self, server_util):
         """Eq. 3 LHS. server_util: (S,) mean chip util -> CFM (S,)."""
-        return (self.airflow_idle
-                + (self.airflow_max - self.airflow_idle) * server_util)
+        return (self.airflow_idle_cfm
+                + (self.airflow_max_cfm - self.airflow_idle_cfm) * server_util)
 
     def max_util_for_temp(self, t_inlet, t_limit):
         """Invert Eq. 2: hottest-chip util cap to stay below t_limit."""

@@ -128,6 +128,16 @@ def _paged_insert(pool, prefill, blk_ids, row):
     return jax.tree.map(put, pool, prefill)
 
 
+def _dev_i32(v) -> jnp.ndarray:
+    """Explicit upload of a host int scalar.  The incremental mirror
+    helpers below are jitted; handing them a bare Python int is an
+    *implicit* host-to-device transfer on every lane touch — a per-step
+    sync on real accelerators, and the thing
+    ``jax.transfer_guard("disallow")`` (the hot-path test guard) trips
+    on.  ``device_put`` is an explicit, sanctioned transfer."""
+    return jax.device_put(np.int32(v))
+
+
 @partial(jax.jit, donate_argnums=(0,))
 def _dev_set_row(arr, i, row):
     return arr.at[i].set(row)
@@ -215,15 +225,16 @@ class PagedCachePool:
         """Mirror one block-table row to the device copy in place."""
         if "tables" in self._dev and "tables" not in self._dirty:
             self._dev["tables"] = _dev_set_row(
-                self._dev["tables"], lane,
-                jnp.asarray(self.block_tables[lane], jnp.int32))
+                self._dev["tables"], _dev_i32(lane),
+                jax.device_put(self.block_tables[lane].astype(np.int32)))
         else:
             self._dirty.add("tables")
 
     def _touch_item(self, name: str, lane: int) -> None:
         if name in self._dev and name not in self._dirty:
             self._dev[name] = _dev_set_item(
-                self._dev[name], lane, int(self._host_of(name)[lane]))
+                self._dev[name], _dev_i32(lane),
+                _dev_i32(self._host_of(name)[lane]))
         else:
             self._dirty.add(name)
 
@@ -333,8 +344,8 @@ class PagedCachePool:
         blks = [self.free_blocks.pop() for _ in range(n)]
         self.ref[blks] = 1
         self.cache = _paged_insert(self.cache, prefill_cache,
-                                   jnp.asarray(blks, jnp.int32),
-                                   jnp.asarray(row, jnp.int32))
+                                   jax.device_put(np.asarray(blks, np.int32)),
+                                   _dev_i32(row))
         self.block_tables[lane, :] = 0
         self.block_tables[lane, :n] = blks
         self.lengths[lane] = prompt_len
@@ -460,15 +471,16 @@ class PagedCachePool:
         self.token_hist[lane] = row
         if "hist" in self._dev and "hist" not in self._dirty:
             self._dev["hist"] = _dev_set_row(
-                self._dev["hist"], lane, jnp.asarray(row, jnp.int32))
+                self._dev["hist"], _dev_i32(lane), jax.device_put(row))
         else:
             self._dirty.add("hist")
 
     def set_hist_token(self, lane: int, pos: int, tok: int) -> None:
         self.token_hist[lane, pos] = tok
         if "hist" in self._dev and "hist" not in self._dirty:
-            self._dev["hist"] = _dev_set_cell(self._dev["hist"], lane, pos,
-                                              tok)
+            self._dev["hist"] = _dev_set_cell(
+                self._dev["hist"], _dev_i32(lane), _dev_i32(pos),
+                _dev_i32(tok))
         else:
             self._dirty.add("hist")
 

@@ -1,7 +1,31 @@
 import os
 import sys
 
+import pytest
+
 # keep the default 1-device view for smoke tests/benches (the dry-run sets
 # its own 512-device flag in-process before importing jax)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture(autouse=True)
+def _tapaslint_runtime_guards(request):
+    """Runtime teeth for the tapaslint invariants (see
+    ``repro.analysis.lint.runtime``): kernel / engine-hot-path test
+    modules opt in with ``pytestmark = pytest.mark.leakcheck`` (tracer
+    leaks fail at the leak site) or ``pytest.mark.hotpath_guard``
+    (additionally, any implicit host<->device transfer fails — inputs
+    must be staged with ``jax.device_put`` before the guarded work)."""
+    hot = request.node.get_closest_marker("hotpath_guard")
+    leak = hot or request.node.get_closest_marker("leakcheck")
+    if not leak:
+        yield
+        return
+    from repro.analysis.lint import runtime as rt
+    if hot:
+        with rt.hot_path_guard():
+            yield
+    else:
+        with rt.no_leaked_tracers():
+            yield

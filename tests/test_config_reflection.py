@@ -1,0 +1,144 @@
+"""Reflection round-trips over the configs/ and core/datacenter.py
+dataclasses: every copy/scale helper must be *total* — no field may
+silently revert to its default when a modified copy is built (the
+``scale_datacenter`` bug, tapaslint TL004).
+
+The tests are generic over ``dataclasses.fields`` so a field added later
+is covered without editing them."""
+import dataclasses
+
+import pytest
+
+from repro.configs import ArchConfig, get_config, list_archs
+from repro.configs.shapes import Shape
+from repro.core.datacenter import DCConfig, HWProfile, scale_datacenter
+from repro.core.fleet import FleetConfig, FleetSim, RegionSpec
+
+
+def _sentinel_for(current):
+    """A replacement value distinguishable from ``current`` (and from the
+    field's default).  Returns None for kinds we don't perturb."""
+    if isinstance(current, bool):
+        return not current
+    if isinstance(current, int):
+        return current + 7
+    if isinstance(current, float):
+        return current * 1.5 + 0.125
+    if isinstance(current, str):
+        return current + "_x"
+    if isinstance(current, tuple):
+        return current + ("sentinel",)
+    return None
+
+
+def _perturbed(instance):
+    """A copy with EVERY perturbable field moved off its current (and
+    default) value, so a helper that drops a field is caught on any of
+    them."""
+    kw = {}
+    for f in dataclasses.fields(instance):
+        s = _sentinel_for(getattr(instance, f.name))
+        if s is not None:
+            kw[f.name] = s
+    return dataclasses.replace(instance, **kw), set(kw)
+
+
+# ---------------------------------------------------------------------------
+# ArchConfig: .replace() totality + smoke_config identity preservation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", sorted(list_archs()))
+def test_archconfig_replace_is_total(arch):
+    """Changing one field via ``.replace`` changes that field and ONLY
+    that field — nothing reverts to a default."""
+    cfg = get_config(arch)
+    for f in dataclasses.fields(cfg):
+        sentinel = _sentinel_for(getattr(cfg, f.name))
+        if sentinel is None:
+            continue
+        out = cfg.replace(**{f.name: sentinel})
+        assert getattr(out, f.name) == sentinel
+        for g in dataclasses.fields(cfg):
+            if g.name != f.name:
+                assert getattr(out, g.name) == getattr(cfg, g.name), \
+                    f"{arch}: replace({f.name}=...) perturbed {g.name}"
+
+
+@pytest.mark.parametrize("arch", sorted(list_archs()))
+def test_smoke_config_preserves_family_identity(arch):
+    """``smoke_config`` shrinks capacity knobs; everything that defines
+    the architecture family must survive the copy unchanged."""
+    cfg = get_config(arch)
+    smoke = cfg.smoke_config()
+    identity = ("name", "family", "attn_kind", "mlp_kind", "norm_kind",
+                "activation", "causal", "qk_norm", "norm_plus_one",
+                "embed_scale", "tie_embeddings", "encoder_only",
+                "input_kind", "rwkv", "router_renorm")
+    for name in identity:
+        assert getattr(smoke, name) == getattr(cfg, name), \
+            f"{arch}: smoke_config reset {name}"
+    assert smoke.num_layers < cfg.num_layers
+    assert smoke.d_model < cfg.d_model
+
+
+def test_shape_replace_is_total():
+    s = Shape(name="decode-1", kind="decode", seq_len=128, global_batch=8)
+    for f in dataclasses.fields(s):
+        sentinel = _sentinel_for(getattr(s, f.name))
+        out = dataclasses.replace(s, **{f.name: sentinel})
+        others = [g.name for g in dataclasses.fields(s) if g.name != f.name]
+        assert getattr(out, f.name) == sentinel
+        assert all(getattr(out, g) == getattr(s, g) for g in others)
+
+
+# ---------------------------------------------------------------------------
+# DCConfig: scale_datacenter totality (the motivating TL004 bug)
+# ---------------------------------------------------------------------------
+
+def test_scale_datacenter_carries_every_field():
+    """Scale a DCConfig whose every field is off its default; only the
+    rack count and the headrooms may change.  The PR 5 bug (provision
+    fractions silently reset to defaults) fails this immediately."""
+    src, perturbed = _perturbed(DCConfig(hw=HWProfile(name="h100")))
+    assert "power_provision_frac" in perturbed  # the original casualty
+    scaled = scale_datacenter(src, oversub=0.4)
+    expect_changed = {"racks_per_row", "power_headroom",
+                      "airflow_headroom"}
+    for f in dataclasses.fields(DCConfig):
+        if f.name in expect_changed:
+            assert getattr(scaled, f.name) != getattr(src, f.name)
+        else:
+            assert getattr(scaled, f.name) == getattr(src, f.name), \
+                f"scale_datacenter dropped {f.name}"
+    # capacity grew; envelopes did not
+    assert scaled.n_servers > src.n_servers
+    assert scaled.power_headroom * scaled.racks_per_row == pytest.approx(
+        src.power_headroom * src.racks_per_row)
+
+
+def test_scale_datacenter_zero_oversub_is_identity():
+    src, _ = _perturbed(DCConfig())
+    assert scale_datacenter(src, 0.0) == src
+
+
+# ---------------------------------------------------------------------------
+# RegionSpec -> SimConfig forwarding (FleetSim's per-region copy)
+# ---------------------------------------------------------------------------
+
+def test_fleet_forwards_region_spec_fields():
+    """The per-region ``SimConfig`` carries the spec's dc and the fleet's
+    shared knobs — a dropped forward would revert them to SimConfig
+    defaults (this is how ``control``/``iaas_only_capping`` went missing
+    before tapaslint TL004)."""
+    dc = DCConfig(n_rows=2, racks_per_row=3, servers_per_rack=2, seed=9)
+    cfg = FleetConfig(
+        regions=(RegionSpec("east", dc=dc, wan_rtt_ms=10.0,
+                            iaas_only_capping=True),),
+        horizon_h=3.0, tick_min=15.0, seed=4, saas_fraction=0.41)
+    sim = FleetSim(cfg).sims["east"]
+    assert sim.cfg.dc == dc
+    assert sim.cfg.horizon_h == 3.0
+    assert sim.cfg.tick_min == 15.0
+    assert sim.cfg.seed == 4
+    assert sim.cfg.saas_fraction == 0.41
+    assert sim.cfg.iaas_only_capping is True

@@ -171,7 +171,7 @@ def test_protocol_invariants_under_tapas():
     res = sim.run()
     assert spy.placements > 0
     assert spy.routes > 0
-    assert np.isfinite(res.max_gpu_temp).all()
+    assert np.isfinite(res.max_gpu_temp_c).all()
 
 
 def test_custom_policy_plugs_in():
@@ -196,7 +196,7 @@ def test_custom_policy_plugs_in():
                                    inner.placement, inner.routing,
                                    inner.reconfig)))
     res = sim.run()
-    assert (res.max_gpu_temp > 0).any()
+    assert (res.max_gpu_temp_c > 0).any()
 
 
 # ---------------------------------------------------------------------------
@@ -258,7 +258,7 @@ def test_scenario_events_shape_the_run():
     calm = ClusterSim(SimConfig(**kw)).run()
     hot = ClusterSim(SimConfig(scenario=Scenario((
         WeatherShift(start_h=0.0, end_h=4.0, delta_c=12.0),)), **kw)).run()
-    assert hot.max_gpu_temp.max() > calm.max_gpu_temp.max()
+    assert hot.max_gpu_temp_c.max() > calm.max_gpu_temp_c.max()
     # scripted VM arrivals join the workload (new endpoint appears)
     sim = ClusterSim(SimConfig(scenario=Scenario((
         VMArrival(arrival_h=0.0, kind="saas", customer="ep-scripted",

@@ -12,8 +12,9 @@ from repro.configs import get_config
 from repro.models import build_model, local_plan
 from repro.serving import Engine, EngineKnobs, PagedCachePool, Request
 
-# whole-module: every test drives a live jitted engine (CI sim job)
-pytestmark = pytest.mark.slow
+# whole-module: every test drives a live jitted engine (CI sim job);
+# leakcheck = tracer escapes fail at the leak site (tapaslint runtime)
+pytestmark = [pytest.mark.slow, pytest.mark.leakcheck]
 
 
 @pytest.fixture(scope="module")

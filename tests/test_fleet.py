@@ -64,6 +64,41 @@ def test_single_region_golden_router_is_also_parity():
     _assert_summary(fs.run().regions["solo"].summary(), ref.summary())
 
 
+def test_per_region_control_policy_plugs_in():
+    """``RegionSpec.control`` forwards to the region's ``SimConfig``: a
+    custom control plane (here a factory building a counting spy around
+    the TAPAS plane) actually drives its region while siblings keep the
+    flag-built default.  Regression for the field-by-field SimConfig
+    construction that silently dropped ``control`` (tapaslint TL004)."""
+    from repro.core.simulator import (CompositeControlPlane,
+                                      build_control_policy)
+
+    calls = {"begin_tick": 0, "place": 0}
+
+    class CountingPlane(CompositeControlPlane):
+        def begin_tick(self, state):
+            calls["begin_tick"] += 1
+            super().begin_tick(state)
+
+        def place(self, state, vm):
+            calls["place"] += 1
+            return super().place(state, vm)
+
+    def factory():
+        inner = build_control_policy(TAPAS, tick_s=600.0, seed=0)
+        return CountingPlane(inner.placement, inner.routing,
+                             inner.reconfig)
+
+    cfg = FleetConfig(
+        regions=(RegionSpec("east", dc=SMALL, wan_rtt_ms=10.0,
+                            control=factory),
+                 RegionSpec("west", dc=SMALL, wan_rtt_ms=30.0)),
+        horizon_h=2.0, tick_min=10.0, seed=0, policy=TAPAS)
+    res = FleetSim(cfg).run()
+    assert set(res.regions) == {"east", "west"}
+    assert calls["begin_tick"] > 0 and calls["place"] > 0
+
+
 # ---------------------------------------------------------------------------
 # fleet state + stepping
 # ---------------------------------------------------------------------------

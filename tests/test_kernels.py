@@ -6,6 +6,9 @@ import pytest
 
 from repro.kernels import ops, ref
 
+# whole-module: tracer escapes fail at the leak site (tapaslint runtime)
+pytestmark = pytest.mark.leakcheck
+
 
 def arr(rng, *s, dtype=jnp.float32):
     return jnp.asarray(rng.standard_normal(s), dtype)

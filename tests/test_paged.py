@@ -10,8 +10,9 @@ from repro.kernels import ops, ref
 from repro.models import build_model, local_plan
 from repro.serving import Engine, EngineKnobs, PagedCachePool, Request
 
-# whole-module: kernel sweeps + live engines (CI sim job)
-pytestmark = pytest.mark.slow
+# whole-module: kernel sweeps + live engines (CI sim job);
+# leakcheck = tracer escapes fail at the leak site (tapaslint runtime)
+pytestmark = [pytest.mark.slow, pytest.mark.leakcheck]
 
 
 def arr(rng, *s, dtype=jnp.float32):

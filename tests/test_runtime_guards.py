@@ -1,0 +1,163 @@
+"""Runtime teeth for the tapaslint invariants: the transfer guard trips
+on a deliberate implicit host->device leak, the leak checker trips on an
+escaped tracer, the steady-state engine drain runs clean under the full
+hot-path guard, and the fused spec-decode horizon holds a zero retrace
+budget at two horizons."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.lint import runtime as rt
+from repro.configs import get_config
+from repro.models import build_model, local_plan
+from repro.serving import Engine, EngineKnobs, Request
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("llama2-7b").smoke_config()
+    return build_model(cfg, local_plan(param_dtype=jnp.bfloat16))
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_model):
+    return tiny_model.init(jax.random.PRNGKey(0))
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("n_slots", 3)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("paged", True)
+    kw.setdefault("knobs", EngineKnobs(max_batch=kw["n_slots"]))
+    return Engine(model, params, **kw)
+
+
+def _submit_load(eng, vocab, *, n_req=4, max_new=10, seed=0, stagger=2):
+    rng = np.random.default_rng(seed)
+    for i in range(n_req):
+        plen = int(rng.integers(4, 20))
+        eng.submit(Request(
+            prompt=[int(t) for t in rng.integers(0, vocab, plen)],
+            max_new_tokens=max_new + stagger * i, temperature=0.0))
+
+
+def _drain(eng, limit=300):
+    steps = 0
+    while (eng.queue or eng.active or eng.prefilling) and steps < limit:
+        eng.step()
+        steps += 1
+    assert not (eng.queue or eng.active or eng.prefilling), \
+        f"engine did not drain in {limit} steps"
+    return steps
+
+
+# ---------------------------------------------------------------------------
+# the guards themselves have teeth
+# ---------------------------------------------------------------------------
+
+def test_transfer_guard_trips_on_implicit_upload():
+    """A host value smuggled into jitted code (here: an np array argument,
+    the per-step upload bug shape) raises inside the guard."""
+    f = jax.jit(lambda a: a + 1)
+    x_host = np.ones(3, np.float32)
+    f(x_host)  # compiles + runs fine unguarded
+    with pytest.raises(Exception, match="[Dd]isallowed.*transfer"):
+        with rt.no_implicit_transfers():
+            f(x_host)
+
+
+def test_transfer_guard_sanctions_explicit_staging():
+    """The sanctioned pattern — device_put before the guarded region,
+    sanctioned_readback inside it — passes the same guard."""
+    f = jax.jit(lambda a: a + 1)
+    x_dev = jax.device_put(np.ones(3, np.float32))
+    f(x_dev)
+    with rt.no_implicit_transfers():
+        y = f(x_dev)
+        out = rt.sanctioned_readback(y)
+    np.testing.assert_allclose(out, 2.0)
+
+
+def test_leak_check_trips_on_escaped_tracer():
+    """A tracer stashed outside its trace fails at the leak site instead
+    of as a deferred ConcretizationError three modules away."""
+    leaked = []
+
+    @jax.jit
+    def f(a):
+        leaked.append(a)      # tapaslint: disable=TL002
+        return a * 2
+
+    with pytest.raises(Exception, match="[Ll]eak"):
+        with rt.no_leaked_tracers():
+            f(jnp.ones(3))
+
+
+def test_retrace_budget_catches_respecialization():
+    """A shape varying per call inside the fenced region exceeds budget 0
+    (the PR 6 shrinking-tail failure mode, reproduced in miniature)."""
+    f = jax.jit(lambda a: a.sum())
+    f(jnp.ones(4))  # warmup: one live bucket
+    with pytest.raises(AssertionError, match="retrace budget"):
+        with rt.retrace_budget(f):
+            f(jnp.ones(5))  # new shape -> new compile
+
+
+def test_retrace_budget_passes_at_steady_shape():
+    f = jax.jit(lambda a: a.sum())
+    f(jnp.ones(4))
+    with rt.retrace_budget(f):
+        for _ in range(5):
+            f(jnp.ones(4))
+
+
+def test_cache_size_and_jit_entries(tiny_model, tiny_params):
+    eng = _engine(tiny_model, tiny_params)
+    entries = rt.jit_entries(eng)
+    assert "_decode_multi_jit" in entries and "_prefill_jit" in entries
+    assert all(rt.cache_size(f) == 0 for f in entries.values())
+
+
+# ---------------------------------------------------------------------------
+# the serving hot path holds the invariants (CI sim job)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("draft", [None, "ngram"])
+def test_steady_state_drain_is_transfer_clean(tiny_model, tiny_params,
+                                              draft):
+    """After warmup, a full drain does no implicit host->device transfer:
+    every upload on the decode/admission path is explicitly staged
+    (kvcache ``_dev_i32`` / ``device_put``).  The engine's per-horizon
+    readback is device->host and sanctioned."""
+    eng = _engine(tiny_model, tiny_params, draft=draft, horizon=4)
+    vocab = tiny_model.cfg.vocab_size
+    _submit_load(eng, vocab)
+    for _ in range(3):          # warmup: compile prefill + decode paths
+        eng.step()
+    with rt.no_implicit_transfers():
+        _drain(eng)
+    assert len(eng.stats.completed) == 4
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("horizon", [2, 4])
+def test_spec_decode_holds_zero_retrace_budget(tiny_model, tiny_params,
+                                               horizon):
+    """Compile-cache delta of the fused spec-decode entry point
+    (``Model.decode_spec_paged`` under jit) is exactly 0 across a
+    drained run once the live shape buckets are warm — the shrinking
+    tail must park on device, not re-specialize the scan."""
+    eng = _engine(tiny_model, tiny_params, draft="ngram", horizon=horizon)
+    vocab = tiny_model.cfg.vocab_size
+    _submit_load(eng, vocab)
+    # warm every live bucket: run until the first spec horizon has
+    # compiled, then fence the rest of the drain
+    while rt.cache_size(eng._decode_spec_jit) == 0:
+        eng.step()
+    with rt.retrace_budget(eng._decode_spec_jit, eng._decode_multi_jit):
+        _drain(eng)
+    assert len(eng.stats.completed) == 4
+    assert eng.stats.accepted_per_sync >= 1.0

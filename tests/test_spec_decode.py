@@ -14,8 +14,9 @@ from repro.models.transformer import (lane_keys, ngram_propose,
 from repro.serving import Engine, EngineKnobs, Request
 from repro.serving.backend import EngineBackend
 
-# whole-module: live jitted engines + PRNG sweeps (CI sim job)
-pytestmark = pytest.mark.slow
+# whole-module: live jitted engines + PRNG sweeps (CI sim job);
+# leakcheck = tracer escapes fail at the leak site (tapaslint runtime)
+pytestmark = [pytest.mark.slow, pytest.mark.leakcheck]
 
 
 @pytest.fixture(scope="module")

@@ -78,8 +78,8 @@ def test_gpu_temp_inversion(dc, thermal):
 def test_airflow_linear_bounds(thermal):
     a0 = float(np.asarray(thermal.airflow(np.asarray([0.0])))[0])
     a1 = float(np.asarray(thermal.airflow(np.asarray([1.0])))[0])
-    assert a0 == pytest.approx(thermal.airflow_idle)
-    assert a1 == pytest.approx(thermal.airflow_max)
+    assert a0 == pytest.approx(thermal.airflow_idle_cfm)
+    assert a1 == pytest.approx(thermal.airflow_max_cfm)
 
 
 # ---------------- Eq. 4 ----------------
@@ -181,8 +181,8 @@ def test_baseline_router_uniform():
 def test_configurator_respects_caps():
     c = InstanceConfigurator()
     st = c.decide(0, power_cap=0.7, temp_cap=0.7)
-    assert st.entry.power <= 0.7 + 1e-9
-    assert st.entry.temp <= 0.7 + 1e-9
+    assert st.entry.power_frac <= 0.7 + 1e-9
+    assert st.entry.temp_frac <= 0.7 + 1e-9
     assert st.entry.quality >= 1.0 - 1e-9  # no quality loss outside emergency
 
 
@@ -200,7 +200,7 @@ def test_configurator_emergency_trades_quality():
     # the goodput, so the emergency engages a smaller/quantized variant
     st = c.decide(1, power_cap=0.35, temp_cap=0.6, emergency=True,
                   min_goodput=1.2)
-    assert st.entry.power <= 0.35 + 1e-9
+    assert st.entry.power_frac <= 0.35 + 1e-9
     assert st.entry.quality < 1.0  # smaller/quantized model engaged
     assert st.entry.goodput >= 1.0  # throughput held (paper Table 2)
 
@@ -211,10 +211,10 @@ def test_pareto_frontier_is_subset_and_nondominated():
     assert 0 < len(front) <= len(entries)
     for e in front:
         for o in entries:
-            dominates = (o.goodput >= e.goodput and o.power <= e.power
-                         and o.temp <= e.temp and o.quality >= e.quality
-                         and (o.goodput, o.power, o.temp, o.quality)
-                         != (e.goodput, e.power, e.temp, e.quality))
+            dominates = (o.goodput >= e.goodput and o.power_frac <= e.power_frac
+                         and o.temp_frac <= e.temp_frac and o.quality >= e.quality
+                         and (o.goodput, o.power_frac, o.temp_frac, o.quality)
+                         != (e.goodput, e.power_frac, e.temp_frac, e.quality))
             assert not dominates
 
 
@@ -238,7 +238,7 @@ def test_tapas_reduces_peaks(sim_pair):
     # in benchmarks/ (Fig. 19/20)
     assert tap.thermal_events <= base.thermal_events
     if base.thermal_events > 0:
-        assert tap.max_gpu_temp.max() <= base.max_gpu_temp.max() + 0.5
+        assert tap.max_gpu_temp_c.max() <= base.max_gpu_temp_c.max() + 0.5
 
 
 def test_tapas_preserves_service(sim_pair):

@@ -1,0 +1,421 @@
+"""tapaslint rule fixtures: positive (the motivating bug shape fires),
+negative (the sanctioned idiom stays quiet), and suppression
+(``# tapaslint: disable=TLxxx``) per rule, plus framework behavior
+(two-pass registry, baseline multiset diff, line-independent keys).
+
+Pure stdlib — drives ``lint_sources`` over in-memory files; the virtual
+paths matter because rules scope by path prefix."""
+import textwrap
+
+from repro.analysis.lint import (diff_baseline, lint_sources)
+
+SERVING = "src/repro/serving/mod.py"
+MODELS = "src/repro/models/mod.py"
+CORE = "src/repro/core/mod.py"
+
+
+def run(files):
+    if isinstance(files, str):
+        files = {"src/repro/anywhere.py": files}
+    return lint_sources({p: textwrap.dedent(s) for p, s in files.items()})
+
+
+def codes(files):
+    return [f.rule for f in run(files)]
+
+
+# ---------------------------------------------------------------------------
+# TL001 determinism
+# ---------------------------------------------------------------------------
+
+def test_tl001_flags_stdlib_random():
+    fs = """\
+    import random
+
+    def pick(xs):
+        return random.choice(xs)
+    """
+    assert codes(fs) == ["TL001"]
+
+
+def test_tl001_flags_legacy_np_random_and_unseeded_rng():
+    fs = """\
+    import numpy as np
+
+    def draw():
+        a = np.random.rand(3)
+        rng = np.random.default_rng()
+        return a, rng
+    """
+    assert codes(fs) == ["TL001", "TL001"]
+
+
+def test_tl001_flags_hash_and_set_iteration():
+    fs = """\
+    def seed_of(name, servers):
+        for s in set(servers):
+            yield hash(name) ^ s
+    """
+    assert codes(fs) == ["TL001", "TL001"]
+
+
+def test_tl001_quiet_on_sanctioned_idioms():
+    fs = """\
+    import zlib
+    import numpy as np
+
+    def draw(seed, servers):
+        rng = np.random.default_rng(seed)
+        for s in sorted(set(servers)):
+            yield zlib.crc32(s.encode()), rng.integers(10)
+    """
+    assert codes(fs) == []
+
+
+def test_tl001_line_suppression():
+    fs = """\
+    def seed_of(name):
+        return hash(name)  # tapaslint: disable=TL001
+    """
+    assert codes(fs) == []
+
+
+# ---------------------------------------------------------------------------
+# TL002 host-sync leak (scoped to serving/models/kernels)
+# ---------------------------------------------------------------------------
+
+def test_tl002_flags_item_anywhere_in_scope():
+    fs = {SERVING: """\
+    def schedule(scores):
+        return scores[0].item()
+    """}
+    assert codes(fs) == ["TL002"]
+
+
+def test_tl002_flags_coercions_inside_traced_fn():
+    fs = {MODELS: """\
+    import numpy as np
+
+    def decode_step(params, x):
+        n = float(x)
+        return np.asarray(x) + n
+    """}
+    assert codes(fs) == ["TL002", "TL002"]
+
+
+def test_tl002_quiet_outside_scope_and_outside_trace():
+    # same coercions in core/ (out of scope) and in an untraced serving
+    # helper (np.asarray there is the sanctioned per-horizon readback)
+    fs = {CORE: """\
+    def decode_step(params, x):
+        return float(x)
+    """, SERVING: """\
+    import numpy as np
+
+    def drain(dev):
+        return np.asarray(dev)
+    """}
+    assert codes(fs) == []
+
+
+def test_tl002_suppression_on_def_line():
+    fs = {SERVING: """\
+    def stats_probe(x):  # tapaslint: disable=TL002
+        return x.item()
+    """}
+    assert codes(fs) == []
+
+
+# ---------------------------------------------------------------------------
+# TL003 retrace hazard (scoped to serving/models/kernels)
+# ---------------------------------------------------------------------------
+
+def test_tl003_flags_branch_on_runtime_param():
+    fs = {MODELS: """\
+    import jax
+
+    @jax.jit
+    def f(x):
+        if x > 0:
+            return x
+        return -x
+    """}
+    assert codes(fs) == ["TL003"]
+
+
+def test_tl003_quiet_on_static_branches():
+    fs = {MODELS: """\
+    import jax
+
+    @jax.jit
+    def f(x, cfg, causal: bool, w=None):
+        if causal:            # annotated scalar: static by convention
+            x = x + 1
+        if w is None:         # structure check
+            x = x + 2
+        if cfg.deep:          # config: static
+            x = x + 3
+        if x.ndim > 1:        # shape probe: trace-time constant
+            x = x + 4
+        return x
+    """}
+    assert codes(fs) == []
+
+
+def test_tl003_flags_computed_static_kwarg_at_jit_callsite():
+    fs = {SERVING: """\
+    class Engine:
+        def drain(self, toks, left):
+            return self._decode_multi_jit(
+                toks, num_steps=min(self.horizon, left))
+    """}
+    fnd = run(fs)
+    assert [f.rule for f in fnd] == ["TL003"]
+    assert "num_steps" in fnd[0].message
+
+
+def test_tl003_quiet_on_stable_static_kwarg():
+    fs = {SERVING: """\
+    class Engine:
+        def drain(self, toks):
+            return self._decode_multi_jit(toks, num_steps=self.horizon)
+    """}
+    assert codes(fs) == []
+
+
+def test_tl003_suppression():
+    fs = {MODELS: """\
+    import jax
+
+    @jax.jit
+    def f(x):
+        if x > 0:  # tapaslint: disable=TL003
+            return x
+        return -x
+    """}
+    assert codes(fs) == []
+
+
+# ---------------------------------------------------------------------------
+# TL004 dataclass-copy completeness (needs the registry pass)
+# ---------------------------------------------------------------------------
+
+_CFG_DEF = """\
+from dataclasses import dataclass
+
+@dataclass
+class Cfg:
+    a: int
+    b: int
+    c: int = 0
+"""
+
+
+def test_tl004_flags_copy_dropping_a_field():
+    fs = {CORE: _CFG_DEF, SERVING: """\
+    def scale(src, k):
+        return Cfg(a=src.a * k, b=src.b, c=src.c)
+
+    def broken(src):
+        return Cfg(a=src.a, b=src.b)
+    """}
+    fnd = run(fs)
+    assert [f.rule for f in fnd] == ["TL004"]
+    assert fnd[0].symbol == "broken" and "c" in fnd[0].message
+    assert "dataclasses.replace(src" in fnd[0].message
+
+
+def test_tl004_quiet_on_total_copy_splat_and_fresh_construction():
+    fs = {CORE: _CFG_DEF, SERVING: """\
+    def total(src):
+        return Cfg(a=src.a, b=src.b, c=2 * src.c)
+
+    def splat(src, over):
+        return Cfg(**{**vars(src), **over})
+
+    def fresh(a):
+        return Cfg(a=a, b=0)     # not copy-shaped: no verbatim reads
+    """}
+    assert codes(fs) == []
+
+
+def test_tl004_suppression():
+    fs = {CORE: _CFG_DEF, SERVING: """\
+    def partial_view(src):  # tapaslint: disable=TL004
+        return Cfg(a=src.a, b=src.b)
+    """}
+    assert codes(fs) == []
+
+
+# ---------------------------------------------------------------------------
+# TL005 unit-suffix discipline (scoped to core/)
+# ---------------------------------------------------------------------------
+
+def test_tl005_flags_cross_unit_and_cross_scale_arithmetic():
+    fs = {CORE: """\
+    def f(temp_c, power_w, rtt_ms, wait_s):
+        meaning_bug = temp_c + power_w
+        scale_bug = rtt_ms - wait_s
+        return meaning_bug, scale_bug
+    """}
+    fnd = run(fs)
+    assert [f.rule for f in fnd] == ["TL005", "TL005"]
+    assert "temperature with power" in fnd[0].message
+    assert "different scales of time" in fnd[1].message
+
+
+def test_tl005_quiet_on_same_unit_products_and_out_of_scope():
+    fs = {CORE: """\
+    def f(a_w, b_w, dt_h):
+        return a_w + b_w, a_w * dt_h
+    """, SERVING: """\
+    def g(temp_c, power_w):
+        return temp_c + power_w
+    """}
+    assert codes(fs) == []
+
+
+def test_tl005_flags_suffixless_quantity_field():
+    fs = {CORE: """\
+    from dataclasses import dataclass
+
+    @dataclass
+    class Server:
+        gpu_temp: float
+        power_cap_w: float
+        power_headroom: float
+        thermals: object
+    """}
+    fnd = run(fs)
+    assert [f.rule for f in fnd] == ["TL005"]
+    assert "gpu_temp" in fnd[0].message
+
+
+def test_tl005_file_suppression():
+    fs = {CORE: """\
+    # tapaslint: disable-file=TL005
+
+    def f(temp_c, power_w):
+        return temp_c + power_w
+    """}
+    assert codes(fs) == []
+
+
+# ---------------------------------------------------------------------------
+# TL006 protocol conformance (needs the registry pass)
+# ---------------------------------------------------------------------------
+
+_PROTO_DEF = """\
+from typing import Protocol, runtime_checkable
+
+@runtime_checkable
+class ControlPolicy(Protocol):
+    def begin_tick(self, state, now): ...
+    def place(self, state, req): ...
+    def route(self, state, req): ...
+    def reconfigure(self, state): ...
+    def release(self, state, server): ...
+"""
+
+
+def test_tl006_flags_near_complete_implementor_missing_method():
+    fs = {CORE: _PROTO_DEF, SERVING: """\
+    class AlmostPolicy:
+        def begin_tick(self, state, now): ...
+        def place(self, state, req): ...
+        def route(self, state, req): ...
+        def reconfigure(self, state): ...
+    """}
+    fnd = run(fs)
+    assert [f.rule for f in fnd] == ["TL006"]
+    assert "release" in fnd[0].message
+
+
+def test_tl006_flags_signature_drift_on_declared_implementor():
+    fs = {CORE: _PROTO_DEF, SERVING: """\
+    class MyPolicy(ControlPolicy):
+        def begin_tick(self, state, now): ...
+        def place(self, state): ...
+        def route(self, state, req): ...
+        def reconfigure(self, state): ...
+        def release(self, state, server): ...
+    """}
+    fnd = run(fs)
+    assert [f.rule for f in fnd] == ["TL006"]
+    assert "place" in fnd[0].message
+
+
+def test_tl006_flags_required_extra_param():
+    fs = {CORE: _PROTO_DEF, SERVING: """\
+    class EagerPolicy(ControlPolicy):
+        def begin_tick(self, state, now): ...
+        def place(self, state, req, budget): ...
+        def route(self, state, req): ...
+        def reconfigure(self, state): ...
+        def release(self, state, server): ...
+    """}
+    fnd = run(fs)
+    assert [f.rule for f in fnd] == ["TL006"]
+    assert "budget" in fnd[0].message
+
+
+def test_tl006_quiet_on_conforming_and_unrelated_classes():
+    fs = {CORE: _PROTO_DEF, SERVING: """\
+    class FullPolicy:
+        def begin_tick(self, state, now): ...
+        def place(self, state, req): ...
+        def route(self, state, req): ...
+        def reconfigure(self, state): ...
+        def release(self, state, server, verbose=False): ...
+
+    class KwargsPolicy(ControlPolicy):
+        def begin_tick(self, state, now, **kw): ...
+        def place(self, state, req): ...
+        def route(self, state, req): ...
+        def reconfigure(self, state): ...
+        def release(self, state, server): ...
+
+    class Adapter:
+        # shares two hook names; below the all-but-one threshold
+        def begin_tick(self, state, now): ...
+        def release(self, state, server): ...
+    """}
+    assert codes(fs) == []
+
+
+def test_tl006_suppression_on_class_line():
+    fs = {CORE: _PROTO_DEF, SERVING: """\
+    class Partial:  # tapaslint: disable=TL006
+        def begin_tick(self, state, now): ...
+        def place(self, state, req): ...
+        def route(self, state, req): ...
+        def reconfigure(self, state): ...
+    """}
+    assert codes(fs) == []
+
+
+# ---------------------------------------------------------------------------
+# framework: syntax errors, baseline diff, key stability
+# ---------------------------------------------------------------------------
+
+def test_syntax_error_yields_tl000_without_aborting():
+    fnd = run({"src/repro/bad.py": "def f(:\n",
+               "src/repro/ok.py": "def g():\n    return hash('x')\n"})
+    assert [f.rule for f in fnd] == ["TL000", "TL001"]
+
+
+def test_baseline_diff_multiset_semantics():
+    fnd = run({"src/repro/a.py": "def f(x):\n    return hash(x)\n"})
+    keys = [f.key() for f in fnd]
+    new, matched, stale = diff_baseline(fnd, keys + ["TL001 gone.py:: x"])
+    assert new == [] and matched == keys
+    assert stale == ["TL001 gone.py:: x"]
+    new, _, _ = diff_baseline(fnd, [])
+    assert [f.key() for f in new] == keys
+
+
+def test_finding_key_is_line_independent():
+    a = run({"src/repro/a.py": "def f(x):\n    return hash(x)\n"})
+    b = run({"src/repro/a.py": "\n\n\ndef f(x):\n    return hash(x)\n"})
+    assert a[0].key() == b[0].key()
+    assert a[0].line != b[0].line
