@@ -65,6 +65,24 @@ SPECS = {
         {"metric": "per_seed.0.global.unserved_frac",
          "vs": "per_seed.0.global.unserved_frac", "tol_abs": 0.01},
     ],
+    "resilience": [
+        # the recovery contract, re-asserted over the fresh smoke run:
+        # nothing vanishes, the storm barely dents goodput, and turning
+        # recovery off demonstrably loses >= 3x more
+        {"metric": "aggregates.lost_requests_on", "eq": 0},
+        {"metric": "aggregates.min_recovery_goodput_ratio", "min": 0.9},
+        {"metric": "aggregates.min_loss_ratio_off_vs_on", "min": 3.0},
+        {"metric": "aggregates.lost_or_dropped_off", "min": 1},
+        # deterministic drill: the smoke seed-0 goodputs must replay the
+        # recorded trajectory (token-exact — the audit ledger is seeded)
+        {"metric": "per_seed.0.arms.fault_free.goodput_tokens",
+         "vs": "per_seed.0.arms.fault_free.goodput_tokens", "tol_abs": 0},
+        {"metric": "per_seed.0.arms.recovery_on.goodput_tokens",
+         "vs": "per_seed.0.arms.recovery_on.goodput_tokens", "tol_abs": 0},
+        {"metric": "per_seed.0.arms.recovery_off.goodput_tokens",
+         "vs": "per_seed.0.arms.recovery_off.goodput_tokens",
+         "tol_abs": 0},
+    ],
     "fleet_oversub": [
         {"metric": "per_seed.0.planner.coordinated_safe", "eq": True},
         # the headline claims, re-asserted over the fresh smoke run

@@ -37,7 +37,7 @@ DEFAULT_BASELINE = ROOT / "scripts" / "tapaslint_baseline.txt"
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="tapaslint",
-        description="repo-specific static analysis (TL001-TL006)")
+        description="repo-specific static analysis (TL001-TL007)")
     ap.add_argument("paths", nargs="*", default=None,
                     help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
     ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),

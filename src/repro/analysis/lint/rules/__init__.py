@@ -5,6 +5,7 @@ from repro.analysis.lint.rules.tl003_retrace import RetraceRule
 from repro.analysis.lint.rules.tl004_dataclass_copy import DataclassCopyRule
 from repro.analysis.lint.rules.tl005_units import UnitSuffixRule
 from repro.analysis.lint.rules.tl006_protocol import ProtocolConformanceRule
+from repro.analysis.lint.rules.tl007_swallowed_error import SwallowedErrorRule
 
 ALL_RULES = [
     DeterminismRule(),
@@ -13,6 +14,7 @@ ALL_RULES = [
     DataclassCopyRule(),
     UnitSuffixRule(),
     ProtocolConformanceRule(),
+    SwallowedErrorRule(),
 ]
 
 RULES_BY_CODE = {r.code: r for r in ALL_RULES}

@@ -80,6 +80,9 @@ class RegionSpec:
     # forwarded to SimConfig.iaas_only_capping (None derives from the
     # fleet ``policy`` flags; set when driving a custom ``control``)
     iaas_only_capping: bool | None = None
+    # forwarded to SimConfig.resilience (a core.faults.ResilienceKnobs;
+    # None -> the region runs with full recovery defaults)
+    resilience: object | None = None
 
     def __post_init__(self):
         if not isinstance(self.name, str) or not self.name:
@@ -141,6 +144,9 @@ class FleetState:
     demand: dict                   # endpoint -> {name: natural demand}
     price: dict = field(default_factory=dict)   # name -> effective $/kWh
     #                                             (shock-scaled power_price)
+    telemetry_age: dict = field(default_factory=dict)  # name -> ticks the
+    #                                             region's telemetry has been
+    #                                             stale (SensorDropout)
     carbon: dict = field(default_factory=dict)  # name -> grid carbon
     #                                             intensity right now
     wan_penalty_per_ms: float = 0.0             # the fleet's WAN tax rate
@@ -237,6 +243,10 @@ class FleetKnobs:
     #: weight of grid carbon intensity vs bare power price in the blended
     #: cost index (see ``risk.energy_cost_index``).
     carbon_weight: float = 0.5
+    #: a region whose telemetry has been stale (SensorDropout) for more
+    #: than this many ticks is not trusted as a steering/drain destination
+    #: — its frozen risk score may be hiding a heating region.
+    stale_dest_ticks: int = 2
 
 
 def cost_aware_knobs(**overrides) -> FleetKnobs:
@@ -308,6 +318,10 @@ class GlobalTapasRouter:
             for q in sorted(demands):
                 if q == h or fleet.rtt_ms[(h, q)] > k.rtt_budget_ms:
                     continue
+                # stale telemetry: the frozen risk score may hide a
+                # heating region — never steer *toward* blind spots
+                if fleet.telemetry_age.get(q, 0) > k.stale_dest_ticks:
+                    continue
                 # absolute dest gate: a flapping relative-to-origin gate
                 # would re-couple the two regions' oscillations
                 if fleet.risk[q] >= min(k.risk_threshold,
@@ -362,6 +376,8 @@ class GlobalTapasRouter:
         for q in sorted(demands):
             if q == h or fleet.rtt_ms[(h, q)] > k.rtt_budget_ms:
                 continue
+            if fleet.telemetry_age.get(q, 0) > k.stale_dest_ticks:
+                continue   # blind spot: cheap-looking but unverifiable
             if fleet.emergency[q] or fleet.headroom[q] <= 0.0 \
                     or not thermally_comparable(
                         r_h, fleet.risk[q], band=k.cost_risk_band,
@@ -414,7 +430,8 @@ class GlobalTapasRouter:
                 (fleet.risk[q], fleet.rtt_ms[(h, q)], q)
                 for q in sorted(fleet.regions)
                 if q != h and not fleet.emergency[q]
-                and fleet.risk[q] < k.risk_threshold)
+                and fleet.risk[q] < k.risk_threshold
+                and fleet.telemetry_age.get(q, 0) <= k.stale_dest_ticks)
             # hottest SaaS servers drain first; ties break on server id
             order = sorted((int(s) for s in np.flatnonzero(st.kind == 2)),
                            key=lambda s: (-float(st.risk[s]), s))
@@ -561,6 +578,7 @@ class FleetSim:
                 occupancy=cfg.occupancy, demand_scale=cfg.demand_scale,
                 control=spec.control,
                 iaas_only_capping=spec.iaas_only_capping,
+                resilience=spec.resilience,
                 region_name=spec.name, trace_namespace=ns))
         first = next(iter(self.sims.values()))
         self.ticks = first.ticks
@@ -674,6 +692,8 @@ class FleetSim:
             regions=states, specs=self.specs, rtt_ms=self.rtt_ms,
             risk=risk, emergency=emergency, capacity=capacity,
             headroom=headroom, demand=demand, price=price, carbon=carbon,
+            telemetry_age={n: int(st.telemetry_age_ticks)
+                           for n, st in states.items()},
             wan_penalty_per_ms=self.cfg.wan_penalty_per_ms)
 
     def _apply_shares(self, ep: str, demands: dict, shares: dict,

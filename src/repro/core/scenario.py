@@ -21,6 +21,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, replace
 
+from repro.core.faults import EngineFault, SensorDropout
+
 FAILURE_KINDS = ("ahu", "ups", "cooling", "thermal")
 VM_KINDS = ("iaas", "saas")
 
@@ -167,7 +169,7 @@ class PriceShock:
 
 
 _EVENT_TYPES = (FailureEvent, DemandSurge, WeatherShift, VMArrival,
-                PriceShock)
+                PriceShock, EngineFault, SensorDropout)
 
 
 @dataclass(frozen=True)
@@ -211,6 +213,16 @@ class Scenario:
 
     def vm_arrivals(self) -> list:
         return [ev for ev in self.events if isinstance(ev, VMArrival)]
+
+    def engine_faults(self, now_h: float) -> list:
+        """Engine faults (``core.faults.EngineFault``) active at ``now_h``."""
+        return [ev for ev in self.events
+                if isinstance(ev, EngineFault) and ev.active(now_h)]
+
+    def sensor_dropout(self, now_h: float) -> bool:
+        """True while any ``SensorDropout`` window covers ``now_h``."""
+        return any(isinstance(ev, SensorDropout) and ev.active(now_h)
+                   for ev in self.events)
 
     def price_scale(self, now_h: float, region: str | None = None) -> float:
         """Combined power-price multiplier for ``region`` at ``now_h``

@@ -44,6 +44,7 @@ from repro.core.allocator import (AllocatorState, BaselineAllocator,
                                   PlacementPolicy, TapasAllocator)
 from repro.core.configurator import InstanceConfigurator, ReconfigurePolicy
 from repro.core.datacenter import Datacenter, DCConfig
+from repro.core.faults import EngineFault, ResilienceKnobs
 from repro.core.power import PowerModel, capping_factors
 from repro.core.risk import server_risk
 from repro.core.router import BaselineRouter, RoutingPolicy, TapasRouter
@@ -103,6 +104,10 @@ class SimConfig:
     # customer / endpoint noise.  Both default to the standalone behavior.
     region_name: str = ""
     trace_namespace: str = ""
+    # recovery machinery switches (core.faults.ResilienceKnobs); None ->
+    # everything on at defaults.  Pass faults.recovery_off() for the
+    # no-recovery ablation arm.
+    resilience: ResilienceKnobs | None = None
 
 
 @dataclass
@@ -186,6 +191,8 @@ class ClusterSim:
         self.power = PowerModel.calibrate(self.dc)
         self.scenario = as_scenario(cfg.scenario, cfg.failures)
         self._validate_scenario_targets()
+        self.resilience = (cfg.resilience if cfg.resilience is not None
+                           else ResilienceKnobs())
         self._tseed = trace_seed(cfg.seed, cfg.trace_namespace)
         self.work = generate_workload(
             n_servers=self.dc.n_servers, horizon_h=cfg.horizon_h,
@@ -222,6 +229,11 @@ class ClusterSim:
                 raise ValueError(
                     f"{ev.kind} failure targets aisle {ev.target}, but the "
                     f"datacenter has {self.dc.n_aisles} aisles")
+            if (isinstance(ev, EngineFault) and ev.server is not None
+                    and ev.server >= self.dc.n_servers):
+                raise ValueError(
+                    f"{ev.kind} engine fault targets server {ev.server}, "
+                    f"but the datacenter has {self.dc.n_servers} servers")
 
     def _inject_scripted_vms(self) -> None:
         """Append Scenario VMArrival events to the generated workload."""
@@ -291,6 +303,13 @@ class ClusterSim:
         # rewind, so they are per-run: reattach after each reset
         self.backends: dict = {}   # server -> serving.backend.EngineBackend
         self._backends_synced: set = set()
+        # resilience: watchdog health tracking + last-known-good telemetry
+        self._unhealthy: set = set()
+        self._hb_miss: dict = {}          # server -> consecutive misses
+        self._parked: list = []           # drained reqs with no healthy home
+        self._lkg: dict | None = None     # last-known-good sensor snapshot
+        self._telemetry_age = 0           # ticks since the snapshot was live
+        self.watchdog_drains = 0          # unhealthy transitions observed
         # accumulators
         self._max_temp = np.zeros(self.ticks)
         self._peak_row = np.zeros(self.ticks)
@@ -370,6 +389,26 @@ class ClusterSim:
         # can never push a server past its thermal cap
         state.u_max = np.asarray(th.max_util_for_temp(
             state.inlet_est, th.gpu_limit - 3.0))
+
+        # -- sensor dropout: freeze derived telemetry at last-known-good --
+        # The physics in apply() keeps using ground truth (hardware does
+        # not stop heating because a sensor died); only what the control
+        # plane *sees* freezes.  Risk gets a per-tick staleness bump so
+        # policies steer conservatively instead of trusting the frozen
+        # reading; telemetry_age_ticks exposes the staleness itself.
+        if self.scenario.sensor_dropout(now) and self._lkg is not None:
+            self._telemetry_age += 1
+            state.inlet_est = self._lkg["inlet_est"]
+            state.u_max = self._lkg["u_max"]
+            state.risk = np.minimum(
+                self._lkg["risk"]
+                + self.resilience.stale_risk_bump * self._telemetry_age,
+                1.0)
+            state.telemetry_age_ticks = self._telemetry_age
+        else:
+            self._lkg = {"inlet_est": state.inlet_est,
+                         "u_max": state.u_max, "risk": state.risk.copy()}
+            self._telemetry_age = 0
         return state
 
     def _begin_state(self, ti: int, now: float) -> ClusterState:
@@ -641,12 +680,26 @@ class ClusterSim:
 
     def _sync_backends(self, state: ClusterState, changes: list) -> None:
         """Mirror reconfigure decisions onto bound engines and report the
-        engines' measured goodput back into the state."""
+        engines' measured goodput back into the state.
+
+        The resilience machinery runs here too, in a fixed order: land
+        the tick's engine faults, run the watchdog (drain unhealthy
+        backends onto healthy siblings), walk each degradation ladder,
+        then pump.  Fault application precedes the watchdog so a crash
+        is detected the same tick it fires."""
         for ch in changes:
             backend = self.backends.get(ch.server)
             if backend is not None:
                 backend.apply_config(ch.entry.cfg, paused=ch.reloading)
                 self._backends_synced.add(ch.server)
+        res = self.resilience
+        faults = self.scenario.engine_faults(state.now_h)
+        for srv in sorted(self.backends):
+            self.backends[srv].apply_faults(
+                [f for f in faults if f.server in (None, srv)],
+                now_h=state.now_h, tick=state.tick, knobs=res)
+        if res.watchdog:
+            self._watchdog_tick(state)
         for srv, backend in self.backends.items():
             inst = state.instances.get(srv)
             if srv not in self._backends_synced and inst is not None:
@@ -658,10 +711,51 @@ class ClusterSim:
                 # track the reload drain: paused while pause_ticks run,
                 # admitting again as soon as the configurator's view clears
                 backend.engine.knobs.paused = inst.paused
+            if res.ladder:
+                backend.tick_ladder(state.emergency)
             load = (float(state.saas_load[srv])
                     if state.kind[srv] == 2 else 0.0)
             backend.pump(now=state.now_h, load=load)
             state.measured_goodput[srv] = backend.measured_goodput()
+
+    def _watchdog_tick(self, state: ClusterState) -> None:
+        """Heartbeat sweep: after ``heartbeat_misses`` consecutive missed
+        beats a backend is marked unhealthy and its unfinished requests
+        (in-flight, queued, backing off) are drained onto healthy sibling
+        engines round-robin — re-homed requests keep their identity, so
+        the origin's issued-ledger audit still sees their outcome.  With
+        no healthy sibling the drained work parks at the watchdog and is
+        re-homed the moment a backend recovers.  Recovery clears the
+        unhealthy mark; already re-homed requests stay where they are."""
+        res = self.resilience
+        healthy = [s for s in sorted(self.backends)
+                   if self.backends[s].heartbeat()]
+        for srv in sorted(self.backends):
+            backend = self.backends[srv]
+            if backend.heartbeat():
+                self._hb_miss[srv] = 0
+                self._unhealthy.discard(srv)
+                continue
+            self._hb_miss[srv] = self._hb_miss.get(srv, 0) + 1
+            if self._hb_miss[srv] < res.heartbeat_misses:
+                continue
+            if srv not in self._unhealthy:
+                self._unhealthy.add(srv)
+                self.watchdog_drains += 1
+            # drain every tick while unhealthy: requests pumped into the
+            # dead backend since the last sweep get re-homed too
+            reqs = backend.engine.take_unfinished()
+            dests = [self.backends[h] for h in healthy if h != srv]
+            if not dests:
+                self._parked.extend(reqs)
+                continue
+            for i, req in enumerate(reqs):
+                dests[i % len(dests)].adopt([req])
+        if self._parked and healthy:
+            parked, self._parked = self._parked, []
+            dests = [self.backends[h] for h in healthy]
+            for i, req in enumerate(parked):
+                dests[i % len(dests)].adopt([req])
 
     def result(self) -> SimResult:
         """Aggregate the ticks simulated so far into a SimResult."""

@@ -102,6 +102,10 @@ class ClusterState:
     inlet_est: np.ndarray = None       # (S,) Eq. 1 inlet estimate
     risk: np.ndarray = None            # (S,) Eq. 1-4 violation risk
     u_max: np.ndarray = None           # (S,) Eq. 2 thermal load ceiling
+    telemetry_age_ticks: int = 0       # ticks since inlet_est/risk/u_max
+    #                                    were live (> 0 under SensorDropout:
+    #                                    the values are a frozen last-known-
+    #                                    good snapshot, risk staleness-bumped)
     instances: dict = field(default_factory=dict)  # server -> InstanceView
 
     # -- routing outcome (filled during the route phase) ------------------

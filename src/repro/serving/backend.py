@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.faults import fault_pick
 from repro.core.profiles import ConfigPoint
 from repro.serving.engine import Engine
 from repro.serving.request import Request
@@ -53,7 +54,9 @@ class EngineBackend:
                  requests_per_load: float = 3.0,
                  steps_per_tick: int = 4,
                  prompt_len: int = 6, max_new_tokens: int = 4,
-                 seed: int = 0, draft_min_freq: float | None = None):
+                 seed: int = 0, draft_min_freq: float | None = None,
+                 ladder=None, deadline_ms: float | None = None,
+                 max_retries: int = 3):
         n = engine.n_slots
         self.engine = engine
         self.variant_for_size = variant_for_size or {}
@@ -81,6 +84,19 @@ class EngineBackend:
         self.draft_min_freq = draft_min_freq
         self._stashed_draft: str | None = None
         self.draft_drops = 0
+        # resilience: the fault lane (apply_faults) + degradation ladder
+        # (tick_ladder), both driven by the simulator's reconfigure phase;
+        # `issued` is the zero-silent-loss ledger — every request this
+        # backend ever created, audited with faults.audit_requests after
+        # a drained run
+        self.seed = seed
+        self.ladder = ladder          # core.faults.DegradationLadder | None
+        self.deadline_ms = deadline_ms   # stamped onto pumped requests
+        self.max_retries = max_retries
+        self.issued: list[Request] = []
+        self.dropped: list[Request] = []   # lost to drop-mode crashes
+        self._fault_down = False      # inside a crash window right now
+        self._fault_stashed_draft: str | None = None
 
     # -- control-plane side ------------------------------------------------
     def apply_config(self, cfg: ConfigPoint, *, paused: bool = False) -> None:
@@ -110,27 +126,44 @@ class EngineBackend:
         """Feed demand proportional to the routed ``load`` (nominal-VM
         units) and run scheduler steps; returns decode tokens produced.
 
+        ``now`` is the simulator clock in hours; the engine clock runs in
+        simulated seconds (``now * 3600``) so per-request ``deadline_ms``
+        has its natural unit.  Nothing consumes the absolute timestamps
+        except deadline eviction, and ``measured_goodput`` stays
+        wall-clock based, so the conversion is behavior-neutral for
+        engines without deadlines.
+
         Also measures this tick's decode rate (tokens per wall-second of
         engine stepping, with the simulated frequency knob already folded
         into the step times) so ``measured_goodput`` reflects the engine's
         *current* capacity, not a lifetime average."""
+        now_s = now * 3600.0
         vocab = self.engine.model.cfg.vocab_size
         for _ in range(int(round(load * self.requests_per_load))):
-            self.engine.submit(Request(
+            # fresh construction, not a copy of an existing Request — the
+            # backend attrs just share the field names
+            req = Request(  # tapaslint: disable=TL004
                 prompt=[int(t) for t in self.rng.integers(
                     0, vocab, self.prompt_len)],
                 max_new_tokens=self.max_new_tokens,
-                customer=f"bk{self._next_id % 4}", arrival_s=now))
+                customer=f"bk{self._next_id % 4}", arrival_s=now_s,
+                deadline_ms=self.deadline_ms,
+                max_retries=self.max_retries)
+            self.issued.append(req)
+            self.engine.submit(req)
             self._next_id += 1
         wall_before = self.engine.stats.step_time_total
         produced = 0
         for _ in range(self.steps_per_tick):
+            if self.engine.offline:
+                break   # crashed: nothing steps until restore()
             if self.engine.knobs.paused and not self.engine.active:
                 break   # drained during a reload pause
-            produced += self.engine.step(now=now)
+            produced += self.engine.step(now=now_s)
         wall = self.engine.stats.step_time_total - wall_before
-        # no steps ran (paused-and-drained, or idle) => the instance is
-        # serving nothing right now; report that, not the last busy rate
+        # no steps ran (paused-and-drained, crashed, or idle) => the
+        # instance is serving nothing right now; report that, not the
+        # last busy rate
         self._last_rate = produced / wall if wall > 0.0 else 0.0
         return produced
 
@@ -139,3 +172,80 @@ class EngineBackend:
         window — responds immediately to knob turns (batch/variant change
         tokens-per-step, ``freq_scale`` stretches the step times)."""
         return self._last_rate
+
+    # -- resilience side ---------------------------------------------------
+    def apply_faults(self, faults: list, *, now_h: float, tick: int,
+                     knobs) -> None:
+        """Land this tick's active ``EngineFault`` windows on the engine.
+
+        Crash windows are edge-triggered (one crash() per window, one
+        restore() when it closes); stuck-slow and drafter failures are
+        level-triggered; KV corruption picks one active request per tick
+        via ``fault_pick`` so the injection timeline is a pure function
+        of (seed, kind, tick) — replay-stable.  ``knobs`` is the run's
+        ``ResilienceKnobs``: with recovery off, crashes drop work instead
+        of re-queueing it and corruption goes unguarded."""
+        eng = self.engine
+        kinds = {f.kind for f in faults}
+        now_s = now_h * 3600.0
+        if "crash" in kinds and not self._fault_down:
+            self._fault_down = True
+            self.dropped.extend(
+                eng.crash(now_s, drop=not knobs.requeue_on_crash))
+        elif "crash" not in kinds and self._fault_down:
+            self._fault_down = False
+            eng.restore()
+        slow = [f.slow_factor for f in faults if f.kind == "stuck_slow"]
+        eng.slow_factor = max(slow) if slow else 1.0
+        if "draft_fail" in kinds:
+            if eng.draft_name is not None:
+                self._fault_stashed_draft = eng.draft_name
+                eng.set_drafter(None)
+        elif self._fault_stashed_draft is not None \
+                and eng.draft_name is None:
+            eng.set_drafter(self._fault_stashed_draft)
+            self._fault_stashed_draft = None
+        for kind in ("nan_burst", "kv_corrupt"):
+            if kind in kinds and eng.active and not eng.offline:
+                rids = sorted(eng.active)
+                rid = rids[fault_pick(len(rids), kind, tick, self.seed)]
+                eng.inject_kv_corruption(rid,
+                                         last_block=(kind == "nan_burst"),
+                                         arm_guard=knobs.nan_guard)
+
+    def tick_ladder(self, emergency: bool) -> None:
+        """Walk the attached degradation ladder one rung (down under an
+        emergency, up after a calm stretch); no-op without a ladder or
+        while the engine is down."""
+        if self.ladder is not None and not self.engine.offline:
+            self.ladder.tick(self, emergency)
+
+    def heartbeat(self) -> bool:
+        """Liveness probe for the simulator's watchdog."""
+        return self.engine.heartbeat()
+
+    def adopt(self, reqs: list) -> None:
+        """Accept requests drained off an unhealthy sibling (watchdog
+        re-homing).  They keep their identity — the origin backend's
+        ``issued`` ledger still audits them."""
+        for req in reqs:
+            self.engine.submit(req)
+
+    def drain(self, *, now_h: float, max_steps: int = 200) -> int:
+        """Run the engine dry after the sim's last tick, advancing the
+        clock one simulated second per step so backoff-delayed retries
+        release (and overdue deadlines expire).  A backend still inside
+        a crash window is restored first — the run is over; what matters
+        is that no re-queued request is left in limbo."""
+        eng = self.engine
+        if eng.offline:
+            eng.restore()
+        now_s = now_h * 3600.0
+        produced = 0
+        for _ in range(max_steps):
+            if not (eng.queue or eng.active or eng.prefilling
+                    or eng._delayed):
+                break
+            produced += eng.step(now=now_s)
+            now_s += 1.0
+        return produced

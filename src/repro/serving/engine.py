@@ -39,6 +39,7 @@ The paged decode hot path is device-resident end to end:
 from __future__ import annotations
 
 import functools
+import heapq
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -76,7 +77,8 @@ class EngineStats:
     preemptions: int = 0         # requests requeued for recompute (pool ran
     #                              dry, or displaced by a variant reload)
     variant_swaps: int = 0       # set_variant reloads (may preempt actives)
-    rejected: int = 0            # contexts that can never fit max_seq
+    rejected: int = 0            # finished "rejected": contexts that can
+    #                              never fit max_seq, or retry-exhausted
     host_syncs: int = 0          # device->host readbacks on the serving path
     decode_syncs: int = 0        # the subset issued by decode launches
     # speculative decode accounting: one verify pass emits a whole
@@ -85,6 +87,18 @@ class EngineStats:
     draft_tokens: int = 0        # drafts proposed across verify passes
     accepted_tokens: int = 0     # drafts accepted (excludes bonus tokens)
     verify_passes: int = 0       # target verify passes (lane-rounds) run
+    # resilience accounting: each counter tracks one recovery mechanism;
+    # terminal outcomes live on the Request (mutually exclusive), these
+    # count *events*, so retried can exceed the number of requests
+    submitted: int = 0           # requests ever handed to submit()
+    timed_out: int = 0           # requests evicted past their deadline_ms
+    retried: int = 0             # re-queues via the bounded-retry path
+    #                              (quarantine / crash recompute) — NOT
+    #                              pool-exhaustion preemptions
+    retry_exhausted: int = 0     # retry budget burned -> finished rejected
+    quarantined: int = 0         # lanes pulled by the NaN/Inf KV guard
+    guard_scans: int = 0         # pre-decode corruption scans launched
+    crashes: int = 0             # crash() invocations survived
     n_steps: int = 0             # recorded (working) scheduler steps
     step_time_total: float = 0.0  # running sum of freq-scaled step times
     completed: list = field(default_factory=list)
@@ -101,6 +115,11 @@ class EngineStats:
     def goodput(self, *, ttft_slo: float, tbt_slo: float) -> float:
         """Tokens/s over completed requests meeting both SLOs.
 
+        Only requests that finished ``accepted`` count: a request that
+        produced tokens, was preempted, and later timed out (or burned
+        its retry budget) must not credit those tokens as served — the
+        stats-drift bug class the terminal-outcome invariant pins.
+
         Incremental: each completed request is folded into the per-SLO
         accumulator exactly once, so repeated calls on a long-lived engine
         do not rescan the whole history.
@@ -109,7 +128,8 @@ class EngineStats:
         idx, good, t_max = self._good_acc.get(key, (0, 0, 1e-9))
         for r in self.completed[idx:]:
             t_max = max(t_max, r.finish_s or 0.0)
-            if (r.ttft() or 0) <= ttft_slo and (r.tbt() or 0) <= tbt_slo:
+            if (r.outcome == "accepted" and (r.ttft() or 0) <= ttft_slo
+                    and (r.tbt() or 0) <= tbt_slo):
                 good += len(r.output)
         self._good_acc[key] = (len(self.completed), good, t_max)
         return good / t_max
@@ -195,8 +215,35 @@ class Engine:
         self._prefill_pos: dict[int, int] = {}
         self._pending_waiter: int | None = None   # req deferred on a
         #                                           pending shared prefill
+        # resilience state — all of it inert on the no-fault path: the
+        # backoff heap stays empty, deadline eviction is gated on
+        # _has_deadlines, and the NaN guard scan only runs while armed,
+        # so fault-free streams and host_syncs are byte-identical to a
+        # pre-hardening engine
+        self.offline = False          # crash()ed and not yet restore()d
+        self.slow_factor = 1.0        # stuck-slow fault: step-time stretch
+        self.retry_backoff_s = 0.05   # base of the exponential re-queue
+        #                               backoff (doubles per retry)
+        self._guard_armed = False     # scan KV for NaN/Inf before decode
+        self._delayed: list = []      # (not_before_s, seq, req) heap
+        self._delay_seq = 0
+        self._has_deadlines = False
         self.stats = EngineStats()
         self._bind(model)
+
+    def _make_pool(self) -> None:
+        """(Re)create only the KV pool for the current model.  Crash
+        recovery goes through here: a restart wipes cache state but keeps
+        the jitted entry points — no retrace, just cold KV."""
+        if self.paged:
+            self.pool: Any = PagedCachePool(
+                self.model, self.n_slots, self.max_seq,
+                block_size=self.block_size, n_blocks=self.n_blocks)
+            if self._spec_on and self.draft_name != "ngram":
+                d_model, _ = self.drafters[self.draft_name]
+                self.pool.attach_draft(d_model)
+        else:
+            self.pool = CachePool(self.model, self.n_slots, self.max_seq)
 
     def _bind(self, model: Model) -> None:
         """(Re)build pool + jitted entry points for the current model."""
@@ -333,6 +380,9 @@ class Engine:
 
     # -- request lifecycle -------------------------------------------------
     def submit(self, req: Request) -> None:
+        self.stats.submitted += 1
+        if req.deadline_ms is not None:
+            self._has_deadlines = True
         self.queue.append(req)
 
     @staticmethod
@@ -341,12 +391,22 @@ class Engine:
         preemption (recompute-style resume)."""
         return list(req.prompt) + list(req.output)
 
+    def _finish(self, req: Request, now: float, outcome: str) -> None:
+        """The single terminal transition: stamp exactly one outcome
+        (Request.finish raises on a double-finish), bump its counter,
+        and append to the completed log.  Every serving path ends here,
+        which is what makes the outcome audit exhaustive."""
+        req.finish(now, outcome)
+        if outcome == "timed_out":
+            self.stats.timed_out += 1
+        elif outcome == "rejected":
+            self.stats.rejected += 1
+        self.stats.completed.append(req)
+
     def _reject(self, req: Request, now: float) -> None:
         """A context that can never fit the cache (even after recompute
         growth) is finished empty instead of looping through admission."""
-        req.finish_s = now
-        self.stats.rejected += 1
-        self.stats.completed.append(req)
+        self._finish(req, now, "rejected")
 
     def _activate(self, req: Request, tok: int, now: float) -> None:
         """Append the prefill token and either activate the request or, if
@@ -360,13 +420,178 @@ class Engine:
             self.pool.set_hist_token(lane, int(self.pool.lengths[lane]), tok)
         if (len(req.output) >= req.max_new_tokens
                 or (req.eos_id is not None and tok == req.eos_id)):
-            req.finish_s = now
-            self.stats.completed.append(req)
+            self._finish(req, now, "accepted")
             self.pool.release(req.req_id)
             return
         self.active[req.req_id] = req
         if self.paged:
             self.pool.set_last_token(self.pool.lane_of[req.req_id], tok)
+
+    # -- resilience: deadlines, bounded retry, NaN quarantine, crash -------
+    def _release_delayed(self, now: float) -> None:
+        """Move backoff-delayed retries whose time has come back into the
+        admission queue (no-op while the heap is empty)."""
+        while self._delayed and self._delayed[0][0] <= now:
+            _, _, req = heapq.heappop(self._delayed)
+            self.queue.append(req)
+
+    def _expire_deadlines(self, now: float) -> None:
+        """Evict every request past its deadline — queued, backing off,
+        prefilling, or active — so expired work never occupies a lane.
+        Gated on _has_deadlines: engines that never saw a deadline_ms
+        skip this entirely (no-fault parity)."""
+        if not self._has_deadlines:
+            return
+
+        def expired(r: Request) -> bool:
+            return r.deadline_s is not None and now >= r.deadline_s
+
+        if any(expired(r) for r in self.queue):
+            kept: deque[Request] = deque()
+            for req in self.queue:
+                if expired(req):
+                    self._finish(req, now, "timed_out")
+                else:
+                    kept.append(req)
+            self.queue = kept
+        if any(expired(item[2]) for item in self._delayed):
+            kept_d = []
+            for item in self._delayed:
+                if expired(item[2]):
+                    self._finish(item[2], now, "timed_out")
+                else:
+                    kept_d.append(item)
+            self._delayed = kept_d
+            heapq.heapify(self._delayed)
+        for rid in sorted((rid for rid, r in self.active.items()
+                           if expired(r)), reverse=True):
+            req = self.active.pop(rid)
+            self.pool.release(rid)
+            self._finish(req, now, "timed_out")
+        for rid in sorted((rid for rid, r in self.prefilling.items()
+                           if expired(r)), reverse=True):
+            req = self.prefilling.pop(rid)
+            del self._prefill_pos[rid]
+            self.pool.release(rid)
+            self._finish(req, now, "timed_out")
+
+    def _requeue_for_retry(self, req: Request, now: float) -> None:
+        """Bounded retry on the recompute path: re-queue with exponential
+        backoff, or finish rejected once the budget is burned.  Distinct
+        from _preempt — preemptions are scheduler churn (unlimited, no
+        backoff), retries are fault recovery (bounded, backed off)."""
+        if req.retries >= req.max_retries:
+            self.stats.retry_exhausted += 1
+            self._finish(req, now, "rejected")
+            return
+        req.retries += 1
+        self.stats.retried += 1
+        delay = self.retry_backoff_s * (2.0 ** (req.retries - 1))
+        self._delay_seq += 1
+        heapq.heappush(self._delayed, (now + delay, self._delay_seq, req))
+
+    def _quarantine_scan(self, now: float) -> int:
+        """Pre-decode NaN/Inf sweep over active lanes' KV blocks.  Only
+        runs while armed (a fault injection just landed), so the no-fault
+        path never pays the scan or its host sync.  Corrupted lanes are
+        quarantined: blocks released, request re-queued for recompute via
+        the bounded-retry path — the corrupted KV never feeds a decode
+        launch, which is why recovered streams match fault-free ones."""
+        if not (self._guard_armed and self.paged and self.active):
+            return 0
+        self._guard_armed = False
+        mask = np.zeros(self.pool.n_lanes, bool)
+        for rid in self.active:
+            mask[self.pool.lane_of[rid]] = True
+        bad = self.pool.bad_lanes(mask)
+        self.stats.host_syncs += 1
+        self.stats.guard_scans += 1
+        bad_rids = sorted((rid for rid in self.active
+                           if bad[self.pool.lane_of[rid]]), reverse=True)
+        for rid in bad_rids:
+            req = self.active.pop(rid)
+            self.pool.scrub_lane(rid)     # never recycle poisoned blocks
+            self.pool.release(rid)
+            self.stats.quarantined += 1
+            self._requeue_for_retry(req, now)
+        return len(bad_rids)
+
+    def inject_kv_corruption(self, rid: int, *, last_block: bool = False,
+                             arm_guard: bool = True) -> None:
+        """Fault hook: poison one of an active request's KV blocks with
+        NaNs (oldest block by default — cold corruption; freshest with
+        ``last_block`` — a NaN-logit burst) and arm the guard scan.
+        ``arm_guard=False`` models an unguarded engine: the corruption
+        stays and the next decode reads it."""
+        if not self.paged:
+            raise ValueError("KV corruption targets the paged pool")
+        if rid not in self.active:
+            raise KeyError(f"request {rid} is not active")
+        lane = self.pool.lane_of[rid]
+        n_written = max(1, int(self.pool.lengths[lane]))
+        idx = (n_written - 1) // self.pool.block_size if last_block else 0
+        self.pool.corrupt_lane(lane, block_idx=idx)
+        if arm_guard:
+            self._guard_armed = True
+
+    def crash(self, now: float, *, drop: bool = False) -> list:
+        """Simulate process death.  The engine goes offline (step() is a
+        no-op until restore()) and all KV state is lost.  With
+        ``drop=False`` unfinished work is re-queued for recompute after
+        restart; with ``drop=True`` (recovery disabled) every unfinished
+        request is returned un-finished — the silent loss the resilience
+        audit exists to catch."""
+        self.stats.crashes += 1
+        self.offline = True
+        dropped: list[Request] = []
+        for rid in sorted(set(self.active) | set(self.prefilling),
+                          reverse=True):
+            req = self.active.pop(rid, None)
+            if req is None:
+                req = self.prefilling.pop(rid)
+                del self._prefill_pos[rid]
+            if drop:
+                dropped.append(req)
+            else:
+                self.queue.appendleft(req)
+        if drop:
+            dropped.extend(self.queue)
+            self.queue.clear()
+            dropped.extend(item[2] for item in self._delayed)
+            self._delayed.clear()
+        self._pending_waiter = None
+        self._prefill_pos.clear()
+        self._make_pool()
+        return dropped
+
+    def restore(self) -> None:
+        """Bring a crashed engine back online (its queue survives; KV was
+        already wiped by crash())."""
+        self.offline = False
+
+    def heartbeat(self) -> bool:
+        """Liveness probe the watchdog polls each tick."""
+        return not self.offline
+
+    def take_unfinished(self) -> list:
+        """Strip every unfinished request off this engine (watchdog
+        drain onto siblings): in-flight KV released, queued and
+        backoff-delayed work unhooked.  Returns requests sorted by
+        req_id so re-homing is deterministic."""
+        out = list(self.queue)
+        self.queue.clear()
+        out.extend(item[2] for item in self._delayed)
+        self._delayed.clear()
+        for rid in sorted(set(self.active) | set(self.prefilling),
+                          reverse=True):
+            req = self.active.pop(rid, None)
+            if req is None:
+                req = self.prefilling.pop(rid)
+                del self._prefill_pos[rid]
+            self.pool.release(rid)
+            out.append(req)
+        self._pending_waiter = None
+        return sorted(out, key=lambda r: r.req_id)
 
     def _admit(self, now: float) -> None:
         if self.paged:
@@ -628,10 +853,9 @@ class Engine:
             if (len(req.output) >= req.max_new_tokens
                     or (req.eos_id is not None
                         and req.output[-1] == req.eos_id) or full):
-                req.finish_s = now
                 finished.append(rid)
         for rid in finished:
-            self.stats.completed.append(self.active.pop(rid))
+            self._finish(self.active.pop(rid), now, "accepted")
             self.pool.release(rid)
         self.stats.decode_tokens += produced
         return produced
@@ -716,10 +940,9 @@ class Engine:
             if (len(req.output) >= req.max_new_tokens
                     or (req.eos_id is not None
                         and req.output[-1] == req.eos_id) or full):
-                req.finish_s = now
                 finished.append(rid)
         for rid in finished:
-            self.stats.completed.append(self.active.pop(rid))
+            self._finish(self.active.pop(rid), now, "accepted")
             self.pool.release(rid)
         self.stats.decode_tokens += produced
         return produced
@@ -764,11 +987,10 @@ class Engine:
             full = int(self.pool.lengths[ln]) + 1 >= self.max_seq
             if (len(req.output) >= req.max_new_tokens
                     or (req.eos_id is not None and tok == req.eos_id) or full):
-                req.finish_s = now
                 finished.append(rid)
         self.pool.advance(list(lanes.values()))
         for rid in finished:
-            self.stats.completed.append(self.active.pop(rid))
+            self._finish(self.active.pop(rid), now, "accepted")
             self.pool.release(rid)
         self.stats.decode_tokens += produced
         return produced
@@ -780,6 +1002,11 @@ class Engine:
         """
         t0 = time.perf_counter()
         now = now if now is not None else t0
+        if self.offline:
+            return 0
+        self._release_delayed(now)
+        self._expire_deadlines(now)
+        self._quarantine_scan(now)
         self._admit(now)
         prefilled = self._prefill_tick(now) \
             if self.paged and self.prefill_chunk else 0
@@ -792,15 +1019,17 @@ class Engine:
             else:
                 produced = self._decode_slots(now)
         if produced or prefilled:
-            # simulated frequency knob: a capped clock stretches wall time
+            # simulated frequency knob: a capped clock stretches wall
+            # time; a stuck-slow fault stretches it further
             self.stats.record_step((time.perf_counter() - t0)
+                                   * self.slow_factor
                                    / max(self.knobs.freq_scale, 1e-3))
         return produced
 
     def run(self, *, max_steps: int = 10_000) -> EngineStats:
         steps = 0
-        while (self.queue or self.active or self.prefilling) \
-                and steps < max_steps:
+        while (self.queue or self.active or self.prefilling
+               or self._delayed) and steps < max_steps:
             self.step(now=float(steps))
             steps += 1
         return self.stats

@@ -128,6 +128,54 @@ def _paged_insert(pool, prefill, blk_ids, row):
     return jax.tree.map(put, pool, prefill)
 
 
+@partial(jax.jit, donate_argnums=(0,))
+def _poison_block(pool, blk):
+    """Overwrite one physical block with NaNs in every leaf (fault
+    injection: simulated KV memory corruption).  Donated like the other
+    pool scatters — only the indexed block is touched."""
+    return jax.tree.map(lambda dst: dst.at[:, blk].set(jnp.nan), pool)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _zero_blocks(pool, blk_ids):
+    """Scrub the indexed physical blocks back to zero (quarantine
+    cleanup).  A freed NaN block reused as a decode *append* block is
+    only partially overwritten, and masked attention still folds the
+    residue in as ``0 * NaN`` — so poisoned blocks must be scrubbed to
+    the pool's pristine (zero) state before re-entering the free list."""
+    return jax.tree.map(lambda dst: dst.at[:, blk_ids].set(0), pool)
+
+
+@jax.jit
+def _bad_lane_scan(pool, tables, lengths, mask):
+    """Per-lane NaN/Inf detector over the *written* KV positions.
+
+    Gathers each lane's logical blocks (leaf ``(L, n_blocks, bs, ...)``
+    via ``tables (B, P)`` -> ``(L, B, P, bs, ...)``) and reduces
+    is-not-finite over everything but the lane axis.  Positions at or
+    past ``lengths`` are ignored: append blocks reused from the free
+    list may carry stale NaNs from a previously quarantined lane in
+    slots decode has not written yet, and those are never read by
+    attention — flagging them would be a false quarantine.
+    """
+    n_p = tables.shape[1]
+
+    def leaf_bad(leaf):
+        bs = leaf.shape[2]
+        g = leaf[:, tables]                       # (L, B, P, bs, ...)
+        bad = ~jnp.isfinite(g.astype(jnp.float32))
+        bad = bad.any(axis=tuple(range(4, bad.ndim)))   # (L, B, P, bs)
+        bad = bad.any(axis=0)                           # (B, P, bs)
+        pos = (jnp.arange(n_p)[None, :, None] * bs
+               + jnp.arange(bs)[None, None, :])         # (1, P, bs)
+        valid = pos < lengths[:, None, None]
+        return (bad & valid).any(axis=(1, 2))           # (B,)
+
+    lanes_bad = jnp.stack(
+        [leaf_bad(leaf) for leaf in jax.tree.leaves(pool)])
+    return lanes_bad.any(axis=0) & mask
+
+
 def _dev_i32(v) -> jnp.ndarray:
     """Explicit upload of a host int scalar.  The incremental mirror
     helpers below are jitted; handing them a bare Python int is an
@@ -452,6 +500,38 @@ class PagedCachePool:
     def set_length(self, lane: int, n: int) -> None:
         self.lengths[lane] = n
         self._touch_item("positions", lane)
+
+    # -- fault injection + NaN guard ----------------------------------------
+    def corrupt_lane(self, lane: int, *, block_idx: int = 0) -> None:
+        """Poison the lane's ``block_idx``-th logical block with NaNs
+        (fault injection).  Refusing the parking block keeps parked lanes
+        clean — every idle lane aliases physical block 0."""
+        phys = int(self.block_tables[lane, block_idx])
+        if phys == 0:
+            raise ValueError(
+                f"lane {lane} block {block_idx} is the parking block — "
+                f"the lane holds no data there to corrupt")
+        self.cache = _poison_block(self.cache, _dev_i32(phys))
+
+    def bad_lanes(self, mask) -> np.ndarray:
+        """Which masked lanes hold NaN/Inf anywhere in their written KV.
+        One jitted scan + one host readback (the caller accounts the
+        sync); runs only when the engine's guard is armed."""
+        out = _bad_lane_scan(self.cache, self.tables(), self.positions(),
+                             jax.device_put(np.asarray(mask, bool)))
+        return np.asarray(out)
+
+    def scrub_lane(self, req_id: int) -> None:
+        """Zero every block a quarantined request holds, so the blocks
+        re-enter the free list in the pool's pristine state.  Shared
+        sharers of a poisoned block are quarantined by the same scan
+        (their tables alias the same physical block), so scrubbing under
+        them is safe."""
+        blks = self.blocks_of[req_id]
+        ids = jax.device_put(np.asarray(blks, np.int32))
+        self.cache = _zero_blocks(self.cache, ids)
+        if self.draft_cache is not None:
+            self.draft_cache = _zero_blocks(self.draft_cache, ids)
 
     def set_last_token(self, lane: int, tok: int) -> None:
         self.last_tokens[lane] = tok

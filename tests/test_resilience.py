@@ -1,0 +1,568 @@
+"""Fault injection + graceful degradation: event validation, terminal-
+outcome invariants, NaN-guard quarantine, crash/requeue recovery,
+deadline eviction, ladder walk/unwind, stale-telemetry steering, and
+replay determinism of a full fault drill.
+
+Fast tests (event/Request/ladder/router plumbing) are numpy/stdlib-only;
+engine- and sim-level tests drive live jitted engines and are marked
+``slow`` like the other engine-in-the-loop suites."""
+import types
+
+import numpy as np
+import pytest
+
+from repro.core.datacenter import DCConfig
+from repro.core.faults import (ENGINE_FAULT_KINDS, DegradationLadder,
+                               EngineFault, ResilienceKnobs, SensorDropout,
+                               audit_requests, fault_pick, recovery_off)
+from repro.core.fleet import FleetKnobs, FleetState, GlobalTapasRouter
+from repro.core.scenario import FailureEvent, Scenario
+from repro.core.simulator import TAPAS, ClusterSim, SimConfig
+from repro.serving.request import Request
+
+
+# ---------------------------------------------------------------------------
+# events + knobs: construction-time validation, scenario accessors
+# ---------------------------------------------------------------------------
+
+def test_engine_fault_validation():
+    ok = EngineFault(kind="crash", start_h=1.0, end_h=2.0, server=3)
+    assert ok.active(1.0) and ok.active(1.99) and not ok.active(2.0)
+    with pytest.raises(ValueError, match="kind"):
+        EngineFault(kind="meltdown", start_h=0.0, end_h=1.0)
+    with pytest.raises(ValueError, match="window"):
+        EngineFault(kind="crash", start_h=2.0, end_h=2.0)
+    with pytest.raises(ValueError, match="server"):
+        EngineFault(kind="crash", start_h=0.0, end_h=1.0, server=-1)
+    with pytest.raises(ValueError, match="slow_factor"):
+        EngineFault(kind="stuck_slow", start_h=0.0, end_h=1.0,
+                    slow_factor=0.5)
+    with pytest.raises(ValueError, match="region"):
+        EngineFault(kind="crash", start_h=0.0, end_h=1.0, region="")
+
+
+def test_sensor_dropout_validation():
+    ev = SensorDropout(start_h=0.5, end_h=1.5)
+    assert ev.active(0.5) and not ev.active(1.5)
+    with pytest.raises(ValueError, match="window"):
+        SensorDropout(start_h=1.0, end_h=0.5)
+
+
+def test_scenario_accessors_and_region_slicing():
+    sc = Scenario((
+        EngineFault(kind="crash", start_h=1.0, end_h=2.0, region="west"),
+        EngineFault(kind="nan_burst", start_h=0.0, end_h=3.0),
+        SensorDropout(start_h=1.0, end_h=2.0, region="east"),
+    ))
+    kinds = sorted(f.kind for f in sc.engine_faults(1.5))
+    assert kinds == ["crash", "nan_burst"]
+    assert [f.kind for f in sc.engine_faults(2.5)] == ["nan_burst"]
+    assert sc.sensor_dropout(1.5) and not sc.sensor_dropout(0.5)
+    west = sc.for_region("west")
+    assert [f.kind for f in west.engine_faults(1.5)] == ["crash",
+                                                         "nan_burst"]
+    assert not west.sensor_dropout(1.5)
+    assert sc.for_region("east").sensor_dropout(1.5)
+
+
+def test_resilience_knobs_validation_and_ablation_preset():
+    with pytest.raises(ValueError, match="heartbeat_misses"):
+        ResilienceKnobs(heartbeat_misses=0)
+    with pytest.raises(ValueError, match="stale_risk_bump"):
+        ResilienceKnobs(stale_risk_bump=-0.1)
+    off = recovery_off()
+    assert not (off.watchdog or off.requeue_on_crash or off.nan_guard
+                or off.ladder)
+    assert off.stale_risk_bump == 0.0
+
+
+def test_fault_pick_is_deterministic_and_bounded():
+    picks = [fault_pick(7, "nan_burst", t, 0) for t in range(50)]
+    assert picks == [fault_pick(7, "nan_burst", t, 0) for t in range(50)]
+    assert all(0 <= p < 7 for p in picks)
+    assert len(set(picks)) > 1          # actually spreads over targets
+    with pytest.raises(ValueError):
+        fault_pick(0, "x")
+
+
+def test_fault_kinds_are_closed():
+    assert set(ENGINE_FAULT_KINDS) == {"crash", "nan_burst", "kv_corrupt",
+                                       "stuck_slow", "draft_fail"}
+
+
+# ---------------------------------------------------------------------------
+# Request: deadline/retry validation, single terminal transition
+# ---------------------------------------------------------------------------
+
+def test_request_deadline_and_retry_validation():
+    r = Request(prompt=[1, 2], max_new_tokens=2, arrival_s=10.0,
+                deadline_ms=500.0)
+    assert r.deadline_s == pytest.approx(10.5)
+    assert Request(prompt=[1], max_new_tokens=1).deadline_s is None
+    with pytest.raises(ValueError, match="deadline_ms"):
+        Request(prompt=[1], max_new_tokens=1, deadline_ms=0.0)
+    with pytest.raises(ValueError, match="max_retries"):
+        Request(prompt=[1], max_new_tokens=1, max_retries=-1)
+
+
+def test_request_finish_is_single_shot_and_validated():
+    r = Request(prompt=[1], max_new_tokens=1)
+    with pytest.raises(ValueError, match="outcome"):
+        r.finish(1.0, "vanished")
+    r.finish(1.0, "accepted")
+    assert r.outcome == "accepted" and r.finish_s == 1.0
+    with pytest.raises(RuntimeError, match="finished"):
+        r.finish(2.0, "timed_out")
+
+
+def test_audit_requests_counts_and_flags_lost():
+    reqs = [Request(prompt=[1], max_new_tokens=4) for _ in range(4)]
+    reqs[0].output = [5, 6]
+    reqs[0].finish(1.0, "accepted")
+    reqs[1].finish(1.0, "timed_out")
+    reqs[2].finish(1.0, "rejected")
+    audit = audit_requests(reqs)
+    assert audit["outcomes"] == {"accepted": 1, "timed_out": 1,
+                                 "rejected": 1}
+    assert audit["lost"] == [reqs[3].req_id]
+    assert audit["accepted_tokens"] == 2 and audit["total"] == 4
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder: walk order, exact-value unwind, cap re-assertion
+# ---------------------------------------------------------------------------
+
+class _StubEngine:
+    def __init__(self):
+        self.draft_name = "ngram"
+        self.horizon = 8
+        self.knobs = types.SimpleNamespace(max_batch=8, variant="full")
+        self.offline = False
+
+    def set_drafter(self, name):
+        self.draft_name = name
+
+    def set_variant(self, name):
+        self.knobs.variant = name
+
+
+def _stub_backend():
+    return types.SimpleNamespace(engine=_StubEngine())
+
+
+def test_ladder_walks_down_and_unwinds_exactly():
+    bk = _stub_backend()
+    ladder = DegradationLadder(quantized_variant="q8", calm_ticks=2)
+    assert ladder.rungs() == ["drop_drafter", "shrink_horizon",
+                              "quantized_variant", "cap_batch"]
+    for _ in range(5):                       # one extra: bottom is sticky
+        ladder.tick(bk, emergency=True)
+    eng = bk.engine
+    assert ladder.level == 4 and ladder.walks == 4
+    assert eng.draft_name is None and eng.horizon == 4
+    assert eng.knobs.variant == "q8" and eng.knobs.max_batch == 4
+    for _ in range(2 * 4):                   # calm_ticks per rung back up
+        ladder.tick(bk, emergency=False)
+    assert ladder.level == 0
+    assert (eng.draft_name, eng.horizon, eng.knobs.variant,
+            eng.knobs.max_batch) == ("ngram", 8, "full", 8)
+
+
+def test_ladder_skips_quantized_rung_when_unconfigured():
+    bk = _stub_backend()
+    ladder = DegradationLadder(calm_ticks=1)
+    for _ in range(4):
+        ladder.tick(bk, emergency=True)
+    assert ladder.level == 3                 # 3 rungs without a quant model
+    assert bk.engine.knobs.variant == "full"
+    assert bk.engine.knobs.max_batch == 4
+
+
+def test_ladder_reasserts_batch_cap_over_reconfigure():
+    bk = _stub_backend()
+    ladder = DegradationLadder(calm_ticks=2)
+    for _ in range(3):
+        ladder.tick(bk, emergency=True)      # bottom rung: cap_batch -> 4
+    assert bk.engine.knobs.max_batch == 4
+    bk.engine.knobs.max_batch = 8            # a reconfigure raises it back
+    ladder.tick(bk, emergency=True)
+    assert bk.engine.knobs.max_batch == 4    # the rung's cap wins
+    for _ in range(2 * 3):
+        ladder.tick(bk, emergency=False)
+    assert bk.engine.knobs.max_batch == 8    # exact pre-ladder restore
+
+
+# ---------------------------------------------------------------------------
+# stale-telemetry steering: blind regions are never destinations
+# ---------------------------------------------------------------------------
+
+def _fleet_state(telemetry_age, *, risk, price=None):
+    names = sorted(risk)
+    return FleetState(
+        tick=0, now_h=0.0,
+        regions={n: types.SimpleNamespace(
+            kind=np.array([2, 0]),
+            risk=np.array([risk[n], risk[n]])) for n in names},
+        specs={}, rtt_ms={(a, b): 0.0 if a == b else 10.0
+                          for a in names for b in names},
+        risk=dict(risk), emergency=dict.fromkeys(names, False),
+        capacity=dict.fromkeys(names, 10.0),
+        headroom=dict.fromkeys(names, 5.0),
+        demand={}, price=price or dict.fromkeys(names, 1.0),
+        carbon=dict.fromkeys(names, 1.0),
+        telemetry_age=telemetry_age, wan_penalty_per_ms=0.0)
+
+
+def test_router_never_steers_toward_stale_region():
+    risk = {"hot": 0.9, "stale": 0.1, "fresh": 0.1}
+    demands = dict.fromkeys(risk, 1.0)
+    fresh_run = GlobalTapasRouter().route_region(
+        _fleet_state({}, risk=risk), "ep", dict(demands))
+    assert "stale" in fresh_run["hot"]       # trusted when telemetry is live
+    k = FleetKnobs()
+    stale_run = GlobalTapasRouter().route_region(
+        _fleet_state({"stale": k.stale_dest_ticks + 1, "fresh": 0},
+                     risk=risk), "ep", dict(demands))
+    assert "stale" not in stale_run["hot"]
+    assert stale_run["hot"]["fresh"] > 0.0   # steering still relieves hot
+
+
+def test_cost_route_skips_stale_cheap_region():
+    from repro.core.fleet import cost_aware_knobs
+    risk = {"home": 0.1, "cheap": 0.1}
+    price = {"home": 1.0, "cheap": 0.2}
+    demands = dict.fromkeys(risk, 1.0)
+    live = GlobalTapasRouter(cost_aware_knobs()).route_region(
+        _fleet_state({}, risk=risk, price=price), "ep", dict(demands))
+    assert live["home"].get("cheap", 0.0) > 0.0
+    stale = GlobalTapasRouter(cost_aware_knobs()).route_region(
+        _fleet_state({"cheap": 3}, risk=risk, price=price),
+        "ep", dict(demands))
+    assert stale["home"] == {"home": 1.0}    # cheap-but-blind stays untrusted
+
+
+def test_rebalance_skips_stale_drain_destination():
+    risk = {"down": 0.9, "stale": 0.1, "fresh": 0.1}
+    st = _fleet_state({"stale": 3}, risk=risk)
+    st.emergency["down"] = True
+    migs = GlobalTapasRouter().rebalance(st)
+    assert migs and all(m.dst == "fresh" for m in migs)
+
+
+# ---------------------------------------------------------------------------
+# sensor dropout inside ClusterSim: frozen snapshot, staleness-bumped risk
+# ---------------------------------------------------------------------------
+
+def test_sensor_dropout_freezes_telemetry_and_bumps_risk():
+    dc = DCConfig(n_rows=1, racks_per_row=2, servers_per_rack=4)
+    window = SensorDropout(start_h=0.4, end_h=0.8)
+    sim = ClusterSim(SimConfig(
+        dc=dc, horizon_h=1.2, tick_min=6.0, seed=3, policy=TAPAS,
+        occupancy=0.9, demand_scale=1.0,
+        scenario=Scenario((window,
+                           FailureEvent(kind="cooling", start_h=0.4,
+                                        end_h=0.8, target=0)))))
+    snaps = []
+    while sim.tick < sim.ticks:
+        st = sim.step()
+        snaps.append((st.now_h, st.telemetry_age_ticks,
+                      np.array(st.inlet_est, copy=True),
+                      np.array(st.risk, copy=True)))
+    stale = [s for s in snaps if window.active(s[0])]
+    fresh_before = [s for s in snaps if s[0] < window.start_h]
+    after = [s for s in snaps if s[0] >= window.end_h]
+    assert stale and fresh_before and after
+    assert all(s[1] == 0 for s in fresh_before)
+    ages = [s[1] for s in stale]
+    assert ages == list(range(1, len(stale) + 1))      # monotone staleness
+    lkg = fresh_before[-1]
+    for s in stale:                                    # frozen at LKG...
+        np.testing.assert_array_equal(s[2], lkg[2])
+        assert (s[3] >= lkg[3] - 1e-12).all()          # ...risk only bumped
+    bump = ResilienceKnobs().stale_risk_bump
+    np.testing.assert_allclose(
+        stale[0][3], np.minimum(lkg[3] + bump, 1.0), rtol=0, atol=1e-9)
+    assert all(s[1] == 0 for s in after)               # live again
+
+
+def test_recovery_off_trusts_stale_telemetry_verbatim():
+    dc = DCConfig(n_rows=1, racks_per_row=2, servers_per_rack=4)
+    sim = ClusterSim(SimConfig(
+        dc=dc, horizon_h=0.8, tick_min=6.0, seed=3, policy=TAPAS,
+        occupancy=0.9, demand_scale=1.0,
+        scenario=Scenario((SensorDropout(start_h=0.3, end_h=0.8),)),
+        resilience=recovery_off()))
+    risks = []
+    while sim.tick < sim.ticks:
+        st = sim.step()
+        if st.telemetry_age_ticks:
+            risks.append(np.array(st.risk, copy=True))
+    assert len(risks) >= 2
+    np.testing.assert_array_equal(risks[0], risks[-1])  # no bump at all
+
+
+def test_engine_fault_server_out_of_range_rejected():
+    dc = DCConfig(n_rows=1, racks_per_row=1, servers_per_rack=4)
+    with pytest.raises(ValueError, match="server"):
+        ClusterSim(SimConfig(
+            dc=dc, horizon_h=0.5, tick_min=6.0, seed=0, policy=TAPAS,
+            occupancy=0.9, demand_scale=1.0,
+            scenario=Scenario((EngineFault(kind="crash", start_h=0.0,
+                                           end_h=0.2, server=99),))))
+
+
+# ---------------------------------------------------------------------------
+# live-engine hardening (slow: jitted engines, like the hotpath suites)
+# ---------------------------------------------------------------------------
+
+def slow(fn):
+    """Live jitted engine: sim-lane only, with the runtime tracer guard."""
+    return pytest.mark.slow(pytest.mark.leakcheck(fn))
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import build_model, local_plan
+    cfg = get_config("llama2-7b").smoke_config()
+    return build_model(cfg, local_plan(param_dtype=jnp.bfloat16))
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_model):
+    import jax
+    return tiny_model.init(jax.random.PRNGKey(0))
+
+
+def _engine(model, params, **kw):
+    from repro.serving import Engine, EngineKnobs
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("n_slots", 3)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("paged", True)
+    kw.setdefault("knobs", EngineKnobs(max_batch=kw["n_slots"]))
+    return Engine(model, params, **kw)
+
+
+def _submit(eng, vocab, *, n_req=4, max_new=6, seed=0, **req_kw):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n_req):
+        plen = int(rng.integers(4, 16))
+        req = Request(prompt=[int(t) for t in rng.integers(0, vocab, plen)],
+                      max_new_tokens=max_new, **req_kw)
+        eng.submit(req)
+        reqs.append(req)
+    return reqs
+
+
+def _streams(reqs):
+    return [tuple(r.output) for r in sorted(reqs, key=lambda r: r.req_id)]
+
+
+def _run_dry(eng, *, now=0.0, max_steps=500):
+    for _ in range(max_steps):
+        if not (eng.queue or eng.active or eng.prefilling or eng._delayed):
+            return
+        eng.step(now=now)
+        now += 1.0
+    raise AssertionError("engine did not drain")
+
+
+@slow
+def test_deadline_evicts_queued_and_active(tiny_model, tiny_params):
+    eng = _engine(tiny_model, tiny_params)
+    vocab = tiny_model.cfg.vocab_size
+    # 2 lanes decode; the third request waits queued past its deadline
+    reqs = _submit(eng, vocab, n_req=3, max_new=40, seed=1,
+                   arrival_s=0.0, deadline_ms=5_000.0)
+    eng.knobs.max_batch = 2
+    eng.step(now=0.0)                      # two admitted, one queued
+    assert len(eng.active) + len(eng.prefilling) >= 1 and len(eng.queue) >= 1
+    eng.step(now=10.0)                     # everyone is past 5s now
+    assert eng.stats.timed_out == 3
+    assert all(r.outcome == "timed_out" for r in reqs)
+    assert not (eng.queue or eng.active or eng.prefilling)
+    assert audit_requests(reqs)["lost"] == []
+
+
+@slow
+def test_nan_guard_quarantine_recovers_exact_streams(tiny_model, tiny_params):
+    vocab = tiny_model.cfg.vocab_size
+    base = _engine(tiny_model, tiny_params)
+    base_reqs = _submit(base, vocab, n_req=4, max_new=6, seed=2)
+    _run_dry(base)
+    assert all(r.outcome == "accepted" for r in base_reqs)
+
+    eng = _engine(tiny_model, tiny_params)
+    reqs = _submit(eng, vocab, n_req=4, max_new=6, seed=2)
+    eng.step(now=0.0)
+    victim = sorted(eng.active)[0]
+    eng.inject_kv_corruption(victim, last_block=True)    # NaN-logit burst
+    _run_dry(eng, now=1.0)
+    assert eng.stats.quarantined == 1 and eng.stats.guard_scans == 1
+    assert eng.stats.retried == 1
+    assert all(r.outcome == "accepted" for r in reqs)
+    # recompute-from-context recovery: bit-identical greedy streams
+    assert _streams(reqs) == _streams(base_reqs)
+
+    # ablation: the same corruption unguarded poisons the victim's stream
+    off = _engine(tiny_model, tiny_params)
+    off_reqs = _submit(off, vocab, n_req=4, max_new=6, seed=2)
+    off.step(now=0.0)
+    off.inject_kv_corruption(sorted(off.active)[0], last_block=True,
+                             arm_guard=False)
+    _run_dry(off, now=1.0)
+    assert off.stats.quarantined == 0
+    assert _streams(off_reqs) != _streams(base_reqs)
+
+
+@slow
+def test_crash_requeues_and_recovers_exact_streams(tiny_model, tiny_params):
+    vocab = tiny_model.cfg.vocab_size
+    base = _engine(tiny_model, tiny_params)
+    base_reqs = _submit(base, vocab, n_req=4, max_new=6, seed=3)
+    _run_dry(base)
+
+    eng = _engine(tiny_model, tiny_params)
+    reqs = _submit(eng, vocab, n_req=4, max_new=6, seed=3)
+    eng.step(now=0.0)
+    dropped = eng.crash(1.0)               # requeue mode
+    assert dropped == [] and eng.offline
+    assert eng.step(now=2.0) == 0          # offline engines do nothing
+    eng.restore()
+    _run_dry(eng, now=3.0)
+    assert eng.stats.crashes == 1
+    assert eng.stats.retried == 0          # crash requeue is not a retry
+    assert all(r.outcome == "accepted" for r in reqs)
+    assert _streams(reqs) == _streams(base_reqs)
+
+    # recovery off: drop mode returns the unfinished work, outcome-less
+    off = _engine(tiny_model, tiny_params)
+    off_reqs = _submit(off, vocab, n_req=4, max_new=6, seed=3)
+    off.step(now=0.0)
+    lost = off.crash(1.0, drop=True)
+    off.restore()
+    _run_dry(off, now=2.0)
+    assert lost and all(r.outcome is None for r in lost)
+    assert audit_requests(off_reqs)["lost"] == sorted(r.req_id
+                                                      for r in lost)
+
+
+@slow
+def test_terminal_outcomes_exclusive_exhaustive_no_stats_drift(
+        tiny_model, tiny_params):
+    """The stats-drift bug class: a request preempted by a variant swap
+    and then timed out must count once as timed_out, zero times as a
+    retry, and its tokens must not leak into goodput."""
+    import jax
+    vocab = tiny_model.cfg.vocab_size
+    eng = _engine(tiny_model, tiny_params)
+    small = tiny_model.cfg.replace(num_layers=1, d_ff=32, name="t-small")
+    from repro.models import build_model, local_plan
+    import jax.numpy as jnp
+    m2 = build_model(small, local_plan(param_dtype=jnp.bfloat16))
+    eng.add_variant("small", m2, m2.init(jax.random.PRNGKey(7)))
+
+    reqs = _submit(eng, vocab, n_req=3, max_new=30, seed=4,
+                   arrival_s=0.0, deadline_ms=4_000.0)
+    ok = _submit(eng, vocab, n_req=1, max_new=3, seed=5)   # no deadline
+    eng.step(now=0.0)
+    assert eng.active
+    eng.set_variant("small")               # preempts every in-flight lane
+    assert eng.stats.preemptions >= 1 and eng.stats.variant_swaps == 1
+    assert eng.stats.retried == 0          # preemption is not fault retry
+    _run_dry(eng, now=10.0)                # past every deadline
+    audit = audit_requests(reqs + ok)
+    assert audit["lost"] == []
+    assert audit["outcomes"]["timed_out"] == 3
+    assert audit["outcomes"]["accepted"] == 1
+    # counters agree with per-request terminal outcomes exactly
+    assert eng.stats.timed_out == 3
+    assert eng.stats.submitted == 4 == len(eng.stats.completed)
+    assert eng.stats.retried == 0 and eng.stats.retry_exhausted == 0
+    # goodput credits only accepted requests' tokens
+    good = eng.stats.goodput(ttft_slo=1e9, tbt_slo=1e9)
+    t_max = max(r.finish_s for r in eng.stats.completed)
+    assert good == pytest.approx(sum(len(r.output) for r in ok) / t_max)
+
+
+@slow
+def test_no_fault_path_parity(tiny_model, tiny_params):
+    """Resilience machinery at rest is invisible: identical greedy
+    streams AND identical host-sync counts with or without deadlines
+    armed, as long as no fault fires and no deadline expires."""
+    vocab = tiny_model.cfg.vocab_size
+    plain = _engine(tiny_model, tiny_params)
+    plain_reqs = _submit(plain, vocab, n_req=5, max_new=6, seed=6)
+    _run_dry(plain)
+    armed = _engine(tiny_model, tiny_params)
+    armed_reqs = _submit(armed, vocab, n_req=5, max_new=6, seed=6,
+                         arrival_s=0.0, deadline_ms=3_600_000.0,
+                         max_retries=5)
+    _run_dry(armed)
+    assert _streams(armed_reqs) == _streams(plain_reqs)
+    assert armed.stats.host_syncs == plain.stats.host_syncs
+    assert armed.stats.guard_scans == 0 and armed.stats.timed_out == 0
+
+
+@slow
+def test_fault_drill_replays_bit_identically(tiny_model, tiny_params):
+    """Same seed + scenario => identical fault timeline, outcomes, and
+    recovered token streams across two fresh ClusterSim drills."""
+    from repro.serving import EngineBackend
+
+    def drill():
+        dc = DCConfig(n_rows=1, racks_per_row=2, servers_per_rack=4)
+        probe = ClusterSim(SimConfig(
+            dc=dc, horizon_h=1.2, tick_min=6.0, seed=2, policy=TAPAS,
+            occupancy=0.95, demand_scale=1.0, scenario=Scenario()))
+        attach_tick, saas = None, []
+        while probe.tick < probe.ticks:
+            st = probe.step()
+            saas = [int(s) for s in np.flatnonzero(st.kind == 2)]
+            if len(saas) >= 2:
+                attach_tick = probe.tick
+                break
+        assert attach_tick is not None
+        events = (
+            FailureEvent(kind="cooling", start_h=0.5, end_h=0.8, target=0),
+            EngineFault(kind="crash", start_h=0.5, end_h=0.7,
+                        server=saas[0]),
+            EngineFault(kind="nan_burst", start_h=0.6, end_h=0.7,
+                        server=saas[1]),
+            SensorDropout(start_h=0.5, end_h=0.9),
+        )
+        sim = ClusterSim(SimConfig(
+            dc=dc, horizon_h=1.2, tick_min=6.0, seed=2, policy=TAPAS,
+            occupancy=0.95, demand_scale=1.0,
+            scenario=Scenario(events)))
+        backends = {}
+        while sim.tick < sim.ticks:
+            sim.step()
+            if sim.tick == attach_tick and not backends:
+                for srv in saas[:2]:
+                    bk = EngineBackend(
+                        _engine(tiny_model, tiny_params), seed=srv,
+                        max_new_tokens=8, steps_per_tick=2,
+                        ladder=DegradationLadder(),
+                        deadline_ms=3_600_000.0)
+                    sim.attach_backend(srv, bk)
+                    backends[srv] = bk
+        for bk in backends.values():
+            bk.drain(now_h=float(sim.t_h[-1]) + 1.0)
+        issued = [r for bk in backends.values() for r in bk.issued]
+        audit = audit_requests(issued)
+        counters = tuple(
+            (bk.engine.stats.crashes, bk.engine.stats.quarantined,
+             bk.engine.stats.retried, bk.engine.stats.timed_out,
+             bk.ladder.walks) for bk in backends.values())
+        return audit, counters, _streams(issued), sim.watchdog_drains
+
+    a1, c1, s1, w1 = drill()
+    a2, c2, s2, w2 = drill()
+    assert a1 == a2 and c1 == c2 and s1 == s2 and w1 == w2
+    assert a1["lost"] == []                 # zero silent loss, both runs
+    assert sum(c[0] for c in c1) >= 1       # the crash actually fired
+    assert w1 >= 1                          # the watchdog actually drained

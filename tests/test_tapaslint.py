@@ -395,6 +395,76 @@ def test_tl006_suppression_on_class_line():
 
 
 # ---------------------------------------------------------------------------
+# TL007 swallowed error (scoped to serving/ and core/)
+# ---------------------------------------------------------------------------
+
+def test_tl007_flags_bare_except():
+    fs = {SERVING: """\
+    def drain(eng):
+        try:
+            eng.step()
+        except:
+            return 0
+    """}
+    fnd = run(fs)
+    assert [f.rule for f in fnd] == ["TL007"]
+    assert "bare 'except:'" in fnd[0].message
+
+
+def test_tl007_flags_broad_swallows():
+    fs = {CORE: """\
+    def pump(reqs):
+        for r in reqs:
+            try:
+                r.run()
+            except Exception:
+                continue
+        try:
+            reqs.audit()
+        except (ValueError, BaseException):
+            pass
+        try:
+            reqs.close()
+        except Exception:
+            ...
+    """}
+    assert codes(fs) == ["TL007", "TL007", "TL007"]
+
+
+def test_tl007_quiet_on_narrow_or_handled_and_out_of_scope():
+    fs = {SERVING: """\
+    def finish(reqs, stats):
+        try:
+            reqs.pop()
+        except KeyError:
+            pass                    # narrow: an expected failure
+        try:
+            reqs.flush()
+        except Exception:
+            stats.flush_errors += 1  # broad but recorded
+            raise
+    """, MODELS: """\
+    def load(path):
+        try:
+            return open(path)
+        except Exception:
+            pass                    # out of scope for TL007
+    """}
+    assert codes(fs) == []
+
+
+def test_tl007_suppression():
+    fs = {CORE: """\
+    def probe(dev):
+        try:
+            return dev.read()
+        except Exception:  # tapaslint: disable=TL007
+            pass
+    """}
+    assert codes(fs) == []
+
+
+# ---------------------------------------------------------------------------
 # framework: syntax errors, baseline diff, key stability
 # ---------------------------------------------------------------------------
 
