@@ -48,8 +48,8 @@ def make_planner_fleet(seed: int = 0) -> FleetConfig:
                         region=climate)
 
     regions = (
-        RegionSpec("ridge", dc=dc("hot"), wan_rtt_ms=8.0, power_price=1.2),
-        RegionSpec("lake", dc=dc("cold"), wan_rtt_ms=14.0, power_price=0.7),
+        RegionSpec("ridge", dc=dc("hot"), wan_rtt_ms=8.0, power_price_scale=1.2),
+        RegionSpec("lake", dc=dc("cold"), wan_rtt_ms=14.0, power_price_scale=0.7),
     )
     scenario = Scenario((
         # hours 7-11: ridge's UPS failover caps every row at 75% power,
@@ -75,9 +75,9 @@ def make_cost_fleet(fleet_policy, seed: int = 0) -> FleetSim:
                         region=climate)
 
     regions = (
-        RegionSpec("coal", dc=dc("mild"), wan_rtt_ms=8.0, power_price=1.3,
+        RegionSpec("coal", dc=dc("mild"), wan_rtt_ms=8.0, power_price_scale=1.3,
                    carbon_scale=1.5),
-        RegionSpec("hydro", dc=dc("cold"), wan_rtt_ms=14.0, power_price=0.6,
+        RegionSpec("hydro", dc=dc("cold"), wan_rtt_ms=14.0, power_price_scale=0.6,
                    carbon_scale=0.4),
     )
     scenario = Scenario((

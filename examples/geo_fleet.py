@@ -41,10 +41,10 @@ def make_fleet(fleet_policy, seed: int = 0) -> FleetSim:
                         region=climate)
 
     regions = (
-        RegionSpec("gulf", dc=dc("hot"), wan_rtt_ms=10.0, power_price=1.2),
+        RegionSpec("gulf", dc=dc("hot"), wan_rtt_ms=10.0, power_price_scale=1.2),
         RegionSpec("plains", dc=dc("mild"), wan_rtt_ms=25.0),
         RegionSpec("fjord", dc=dc("cold"), wan_rtt_ms=45.0,
-                   power_price=0.7),
+                   power_price_scale=0.7),
     )
     scenario = Scenario((
         # hour 3-10: gulf loses an AHU + DC cooling strain, mid-heat-wave

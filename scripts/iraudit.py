@@ -1,0 +1,192 @@
+"""iraudit CLI — jaxpr/HLO static audit of the jitted serving hot paths.
+
+    JAX_PLATFORMS=cpu PYTHONPATH=src python scripts/iraudit.py [entries...]
+        audit every registered entrypoint (or the named subset): run the
+        IR001-IR004 invariants and gate the cost metrics against
+        benchmarks/BUDGET_ir.json; exit 1 on any finding or drift
+    python scripts/iraudit.py --explain IR002
+        print an invariant's motivation and fix guidance
+    python scripts/iraudit.py --update-budgets
+        re-record BUDGET_ir.json from the current build (commit the diff —
+        reviewers see the cost delta next to the code that caused it)
+    python scripts/iraudit.py --list
+        show the registry (name, kind, donation declaration, doc)
+
+Everything runs on CPU under abstract shapes: no parameters are
+materialised, Pallas kernels are audited in interpret mode, and nothing
+executes — trace + lower + compile only (~15 s for the full registry).
+Unlike tapaslint there is no baseline and no waiver file: an invariant
+finding on a serving hot path either gets fixed or the entry's registry
+declaration changes in review.
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import os
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+DEFAULT_BUDGETS = ROOT / "benchmarks" / "BUDGET_ir.json"
+
+
+def _fmt_row(name: str, m: dict) -> str:
+    return (f"{name:26s} {m['flops'] / 1e6:8.3f} {m['bytes'] / 1e6:8.3f} "
+            f"{m['peak_live_bytes'] / 1e6:8.3f} {m['n_eqns']:6d} "
+            f"{m['const_bytes']:7d} {m['f32_out_bytes']:8d} "
+            f"{m['aliased_leaves']}/{m['donated_leaves']}")
+
+
+_HEADER = (f"{'entrypoint':26s} {'MFLOPs':>8s} {'MB':>8s} {'peakMB':>8s} "
+           f"{'eqns':>6s} {'constB':>7s} {'f32outB':>8s} alias/don")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="iraudit",
+        description="jaxpr/HLO audit of jitted hot paths (IR001-IR005)")
+    ap.add_argument("entries", nargs="*",
+                    help="entrypoint names or globs (default: all)")
+    ap.add_argument("--budgets", default=str(DEFAULT_BUDGETS),
+                    help="pinned budget file (benchmarks/BUDGET_ir.json)")
+    ap.add_argument("--no-budgets", action="store_true",
+                    help="skip the budget gate; invariants only")
+    ap.add_argument("--update-budgets", action="store_true",
+                    help="re-record the budget file from this build")
+    ap.add_argument("--explain", metavar="IRxxx",
+                    help="print an invariant's motivation + fix guidance")
+    ap.add_argument("--list", action="store_true", dest="list_entries",
+                    help="list registered entrypoints and exit")
+    ap.add_argument("--github", action="store_true",
+                    help="emit ::error workflow annotations and a markdown "
+                         "budget table to $GITHUB_STEP_SUMMARY")
+    args = ap.parse_args(argv)
+
+    # import late: --explain/--list must work without a usable jax
+    from repro.analysis.iraudit import (ENTRYPOINTS, INVARIANTS,
+                                        AuditContext, audit_entry,
+                                        check_budgets, cost_metrics,
+                                        load_budgets, run_invariants,
+                                        write_budgets)
+
+    if args.explain:
+        code = args.explain.upper()
+        if code not in INVARIANTS:
+            print(f"unknown invariant {args.explain!r}; known: "
+                  f"{', '.join(sorted(INVARIANTS))}", file=sys.stderr)
+            return 2
+        name, text = INVARIANTS[code]
+        print(f"{code}  {name}\n\n{text.rstrip()}")
+        return 0
+    if args.list_entries:
+        for e in ENTRYPOINTS:
+            don = f" donate={e.donate}" if e.donate else ""
+            f32 = " f32_dot_ok" if e.f32_dot_ok else ""
+            print(f"{e.name:26s} [{e.kind}]{don}{f32}  {e.doc}")
+        return 0
+
+    names = [e.name for e in ENTRYPOINTS]
+    if args.entries:
+        picked = [n for n in names
+                  if any(fnmatch.fnmatch(n, p) for p in args.entries)]
+        unknown = [p for p in args.entries
+                   if not any(fnmatch.fnmatch(n, p) for n in names)]
+        if unknown:
+            print(f"no entrypoint matches {unknown}; see --list",
+                  file=sys.stderr)
+            return 2
+    else:
+        picked = names
+
+    ctx = AuditContext()
+    findings = []
+    rows: dict = {}
+    by_name = {e.name: e for e in ENTRYPOINTS}
+    for name in picked:
+        audit = audit_entry(by_name[name], ctx)
+        findings.extend(run_invariants(audit))
+        rows[name] = cost_metrics(audit)
+
+    if args.update_budgets:
+        if picked != names:
+            print("--update-budgets requires auditing the full registry "
+                  "(drop the entry filter)", file=sys.stderr)
+            return 2
+        write_budgets(rows, ctx, args.budgets)
+        print(f"budgets re-recorded for {len(rows)} entrypoints -> "
+              f"{args.budgets}")
+        return 0
+
+    problems = []
+    if not args.no_budgets:
+        try:
+            pinned = load_budgets(args.budgets)
+        except FileNotFoundError:
+            problems.append(f"budget file missing: {args.budgets} "
+                            f"(record it with --update-budgets)")
+        else:
+            if picked != names:
+                pinned = {"meta": pinned.get("meta", {}),
+                          "entries": {k: v
+                                      for k, v in pinned["entries"].items()
+                                      if k in set(picked)}}
+            problems = check_budgets(rows, pinned)
+
+    print(_HEADER)
+    for name in picked:
+        print(_fmt_row(name, rows[name]))
+    for f in findings:
+        print(f"FINDING {f}")
+        if args.github:
+            print(f"::error title=iraudit {f.code}::{f.entry}: {f.message}")
+    for p in problems:
+        print(f"BUDGET IR005 {p}")
+        if args.github:
+            print(f"::error title=iraudit IR005::{p}")
+
+    n_bad = len(findings) + len(problems)
+    summary = (f"iraudit: {len(picked)} entrypoints, {len(findings)} "
+               f"invariant finding(s), {len(problems)} budget problem(s)")
+    print(summary)
+    if args.github:
+        step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+        if step_summary:
+            with open(step_summary, "a") as fh:
+                fh.write(f"### iraudit\n\n{summary}\n\n")
+                fh.write("| entrypoint | MFLOPs | MB moved | peak-live MB "
+                         "| eqns | const B | f32-out B | aliased/donated "
+                         "|\n|---|---|---|---|---|---|---|---|\n")
+                for name in picked:
+                    m = rows[name]
+                    fh.write(
+                        f"| `{name}` | {m['flops'] / 1e6:.3f} "
+                        f"| {m['bytes'] / 1e6:.3f} "
+                        f"| {m['peak_live_bytes'] / 1e6:.3f} "
+                        f"| {m['n_eqns']} | {m['const_bytes']} "
+                        f"| {m['f32_out_bytes']} "
+                        f"| {m['aliased_leaves']}/{m['donated_leaves']} "
+                        f"|\n")
+                if findings or problems:
+                    fh.write("\n| kind | detail |\n|---|---|\n")
+                    for f in findings:
+                        fh.write(f"| {f.code} | `{f.entry}`: {f.message} "
+                                 f"|\n")
+                    for p in problems:
+                        fh.write(f"| IR005 | {p} |\n")
+    if n_bad:
+        print(f"\nfindings fail the run; explain an invariant with "
+              f"`python scripts/iraudit.py --explain IR001`, re-record "
+              f"intended cost changes with --update-budgets.")
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except BrokenPipeError:
+        sys.exit(0)

@@ -37,7 +37,7 @@ DEFAULT_BASELINE = ROOT / "scripts" / "tapaslint_baseline.txt"
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="tapaslint",
-        description="repo-specific static analysis (TL001-TL007)")
+        description="repo-specific static analysis (TL001-TL008)")
     ap.add_argument("paths", nargs="*", default=None,
                     help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
     ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
@@ -53,6 +53,11 @@ def main(argv=None) -> int:
                     help="emit ::error workflow annotations for new "
                          "findings and a markdown summary to "
                          "$GITHUB_STEP_SUMMARY")
+    ap.add_argument("--fail-on-baseline", action="store_true",
+                    help="fail if the baseline grandfathers anything: the "
+                         "debt was paid down to zero, and this keeps new "
+                         "findings from being waved through by re-running "
+                         "--update-baseline")
     args = ap.parse_args(argv)
 
     if args.list_rules:
@@ -79,6 +84,15 @@ def main(argv=None) -> int:
         return 0
 
     baseline = [] if args.no_baseline else load_baseline(args.baseline)
+    if args.fail_on_baseline and baseline:
+        print(f"baseline is not empty ({len(baseline)} grandfathered "
+              f"entr{'y' if len(baseline) == 1 else 'ies'} in "
+              f"{args.baseline}); the debt was burned to zero — fix the "
+              f"findings instead of re-grandfathering them")
+        if args.github:
+            print(f"::error title=tapaslint baseline::{len(baseline)} "
+                  f"grandfathered entries re-appeared in {args.baseline}")
+        return 1
     new, matched, stale = diff_baseline(findings, baseline)
 
     for f in new:

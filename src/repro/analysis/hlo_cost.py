@@ -36,6 +36,9 @@ _COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*.*\{\s*
 _TRIP_RE = re.compile(r'known_trip_count[="\{:\s]+n["\s:]+"?(\d+)')
 _CALL_ATTR_RE = re.compile(r"(?:calls|body)=%([\w.\-]+)")
 _COND_ATTR_RE = re.compile(r"condition=%([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_APPLY_RE = re.compile(
+    r"(?:true_computation|false_computation|to_apply)=%([\w.\-]+)")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 
 # ops that move no data / cost nothing
@@ -268,6 +271,21 @@ class HloModuleCost:
             m = _CALL_ATTR_RE.search(ins.attrs)
             if m:
                 c.add(self._comp_cost(m.group(1), count_bytes=count_bytes))
+            # lax.cond lowers to conditional(..., branch_computations={..})
+            # (or legacy true_/false_computation); plain calls use to_apply.
+            # Branches are mutually exclusive, so charge the costliest one —
+            # the upper bound a budget wants.  Before this, conditional
+            # bodies were skipped entirely, zeroing out any graph whose hot
+            # loop sits behind a cond (both fused decode horizons do this).
+            bm = _BRANCHES_RE.search(ins.attrs)
+            branches = ([b.strip().lstrip("%")
+                         for b in bm.group(1).split(",") if b.strip()]
+                        if bm else [])
+            branches += _APPLY_RE.findall(ins.attrs)
+            if branches:
+                costs = [self._comp_cost(b, count_bytes=count_bytes)
+                         for b in branches]
+                c.add(max(costs, key=lambda x: (x.flops, x.bytes)))
             return c
         base = op.replace("-start", "")
         if base in COLLECTIVES and not op.endswith("-done"):

@@ -1,0 +1,38 @@
+"""iraudit — jaxpr/HLO-level static audit of the jitted serving hot paths.
+
+Where ``repro.analysis.lint`` (tapaslint) checks *source* patterns, this
+package checks the *compiled* artifacts: every registered hot-path
+entrypoint is traced under abstract shapes (no params materialised, no
+kernels executed) and two analysis passes run over the result:
+
+* the **jaxpr invariant pass** (``jaxpr_pass``) — forbidden primitives
+  (host callbacks, mid-trace ``device_put``), donation declared-vs-
+  consumed verification against the compiled module's
+  ``input_output_alias`` table, dtype discipline (f32 creeping into a
+  bf16-configured graph), and a closure-constant census with a
+  per-entrypoint byte cap;
+* the **HLO cost pass** (``hlo_pass``) — FLOPs / bytes-accessed via
+  ``analysis/hlo_cost.py`` over the optimized HLO (while-loop trip counts
+  multiplied through), an op census and a peak-live-bytes estimate from
+  jaxpr liveness, emitted as per-entrypoint budget rows.
+
+``benchmarks/BUDGET_ir.json`` pins the budget rows; ``scripts/iraudit.py``
+gates CI on both the invariants and the budgets (``budget.py`` holds the
+comparison tolerances and the added/removed-primitive census diff).
+"""
+from repro.analysis.iraudit.budget import (budget_row, census_diff,
+                                           check_budgets, load_budgets,
+                                           write_budgets)
+from repro.analysis.iraudit.hlo_pass import cost_metrics
+from repro.analysis.iraudit.jaxpr_pass import (INVARIANTS, IRFinding,
+                                               run_invariants)
+from repro.analysis.iraudit.registry import (AuditContext, EntryAudit,
+                                             Entrypoint, ENTRYPOINTS,
+                                             ENTRYPOINTS_BY_NAME,
+                                             audit_entry, audit_all)
+
+__all__ = ["AuditContext", "EntryAudit", "Entrypoint", "ENTRYPOINTS",
+           "ENTRYPOINTS_BY_NAME",
+           "INVARIANTS", "IRFinding", "audit_entry", "audit_all",
+           "budget_row", "census_diff", "check_budgets", "cost_metrics",
+           "load_budgets", "run_invariants", "write_budgets"]

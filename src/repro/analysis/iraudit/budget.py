@@ -1,0 +1,123 @@
+"""Budget pinning + drift gate for the iraudit cost pass.
+
+``benchmarks/BUDGET_ir.json`` is the checked-in contract: one row of cost
+metrics per registered entrypoint plus a meta block recording the
+jax/jaxlib versions and audit geometry the numbers were taken under.
+``check_budgets`` mirrors the ``scripts/check_bench.py`` philosophy —
+named metric, expected vs got, tolerance in the message — with one
+addition: op-census drift reports an added/removed/changed primitive
+diff, not a bare mismatch.
+
+Tolerances: XLA-fusion-dependent metrics (flops / bytes / peak-live) get
+a small relative band; structural metrics (census, consts, f32 surface,
+donation counts) are exact integers and gated exactly.  The numbers are
+only stable under the pinned toolchain, so a version skew is itself a
+failure — re-record under the pin rather than chasing phantom drift.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import jaxlib
+
+# metric -> relative tolerance; everything else in a row is exact
+REL_TOL = {"flops": 0.02, "bytes": 0.02, "peak_live_bytes": 0.05}
+EXACT = ("coll_bytes", "arg_bytes", "out_bytes", "n_eqns", "f32_out_bytes",
+         "const_count", "const_bytes", "donated_leaves", "aliased_leaves")
+
+DEFAULT_BUDGETS = Path(__file__).resolve().parents[4] / "benchmarks" \
+    / "BUDGET_ir.json"
+
+
+def budget_row(metrics: dict) -> dict:
+    """The subset of a cost row that gets pinned (all of it, today)."""
+    return dict(metrics)
+
+
+def meta_block(ctx) -> dict:
+    return {
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "config": ctx.config_name + "-smoke",
+        "geometry": {
+            "n_lanes": ctx.n_lanes, "max_seq": ctx.max_seq,
+            "block_size": ctx.block_size, "n_blocks": ctx.n_blocks,
+            "horizon": ctx.horizon, "chunk": ctx.chunk,
+            "bucket": ctx.bucket,
+        },
+    }
+
+
+def load_budgets(path: Path | str = DEFAULT_BUDGETS) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def write_budgets(rows: dict, ctx, path: Path | str = DEFAULT_BUDGETS) -> None:
+    payload = {"meta": meta_block(ctx), "entries": rows}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def census_diff(pinned: dict, got: dict) -> str:
+    """Human-readable primitive diff: 'added scatter(+2); removed
+    pure_callback; changed dot_general 12->14'."""
+    added = [f"{k}(+{v})" for k, v in sorted(got.items()) if k not in pinned]
+    removed = [f"{k}(-{v})" for k, v in sorted(pinned.items())
+               if k not in got]
+    changed = [f"{k} {pinned[k]}->{got[k]}" for k in sorted(pinned)
+               if k in got and pinned[k] != got[k]]
+    parts = []
+    if added:
+        parts.append("added " + ", ".join(added))
+    if removed:
+        parts.append("removed " + ", ".join(removed))
+    if changed:
+        parts.append("changed " + ", ".join(changed))
+    return "; ".join(parts) or "identical"
+
+
+def check_budgets(current: dict, pinned_payload: dict) -> list:
+    """Compare current rows against the pinned file; returns problem
+    strings (empty = within budget).  ``current``: {entry: metrics}."""
+    problems = []
+    meta = pinned_payload.get("meta", {})
+    ver = (meta.get("jax"), meta.get("jaxlib"))
+    here = (jax.__version__, jaxlib.__version__)
+    if ver != here:
+        problems.append(
+            f"toolchain skew: budgets recorded under jax {ver[0]} / jaxlib "
+            f"{ver[1]}, running {here[0]} / {here[1]} — numbers are only "
+            f"comparable under the pin (CI installs the pinned pair); "
+            f"re-record with --update-budgets under that toolchain")
+        return problems
+    pinned = pinned_payload.get("entries", {})
+    for name in sorted(set(pinned) | set(current)):
+        if name not in current:
+            problems.append(f"{name}: pinned in BUDGET_ir.json but not "
+                            f"registered (stale budget row — re-record)")
+            continue
+        if name not in pinned:
+            problems.append(f"{name}: registered but has no budget row — "
+                            f"record it with --update-budgets")
+            continue
+        got, want = current[name], pinned[name]
+        for key, tol in REL_TOL.items():
+            g, w = float(got[key]), float(want[key])
+            if abs(g - w) > tol * max(abs(w), 1.0):
+                problems.append(
+                    f"{name}: {key} {g:.6g} vs budget {w:.6g} "
+                    f"(|Δ| > {tol:.0%})")
+        for key in EXACT:
+            if int(got[key]) != int(want[key]):
+                problems.append(
+                    f"{name}: {key} {got[key]} vs budget {want[key]} "
+                    f"(exact)")
+        if got["census"] != want["census"]:
+            problems.append(
+                f"{name}: op census drift — "
+                f"{census_diff(want['census'], got['census'])}")
+    return problems

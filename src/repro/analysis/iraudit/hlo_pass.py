@@ -1,0 +1,56 @@
+"""iraudit cost pass: per-entrypoint budget rows from the compiled HLO.
+
+Two families of numbers, chosen for how they are gated:
+
+* **execution costs** from ``analysis/hlo_cost.py`` over the optimized
+  HLO — FLOPs and HBM-traffic bytes with while-loop trip counts
+  multiplied through.  These depend on XLA's fusion choices, so the
+  budget gate gives them a small relative tolerance (and the CI lane
+  pins jax/jaxlib).
+* **structural metrics** straight off the jaxpr — op census, closure
+  constants, f32 surface, peak-live estimate, arg/out bytes,
+  donated-vs-aliased leaf counts.  Exact integers, gated exactly.
+
+The roofline view (``analysis/roofline.py``) consumes the same
+flops/bytes pair, so a budget row doubles as a per-entrypoint roofline
+point when planning kernel work.
+"""
+from __future__ import annotations
+
+from repro.analysis.hlo_cost import analyze_hlo
+from repro.analysis.iraudit.jaxprs import (const_census, f32_out_bytes,
+                                           op_census, peak_live_bytes)
+from repro.analysis.iraudit.jaxpr_pass import hlo_aliased_params
+from repro.analysis.iraudit.registry import EntryAudit
+
+
+def _leaf_bytes(leaves) -> int:
+    total = 0
+    for leaf in leaves:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n * leaf.dtype.itemsize
+    return total
+
+
+def cost_metrics(audit: EntryAudit) -> dict:
+    """One budget row: every gated metric for one entrypoint."""
+    hlo = analyze_hlo(audit.hlo)
+    census = op_census(audit.jaxpr)
+    const_count, const_bytes, _ = const_census(audit.jaxpr)
+    return {
+        "flops": float(hlo["flops"]),
+        "bytes": float(hlo["bytes"]),
+        "coll_bytes": float(hlo["coll_bytes"]),
+        "peak_live_bytes": int(peak_live_bytes(audit.jaxpr)),
+        "arg_bytes": _leaf_bytes(audit.arg_leaves),
+        "out_bytes": _leaf_bytes(audit.out_leaves),
+        "n_eqns": int(sum(census.values())),
+        "f32_out_bytes": int(f32_out_bytes(audit.jaxpr)),
+        "const_count": int(const_count),
+        "const_bytes": int(const_bytes),
+        "donated_leaves": len(audit.donated_idx),
+        "aliased_leaves": len(hlo_aliased_params(audit.hlo)),
+        "census": census,
+    }

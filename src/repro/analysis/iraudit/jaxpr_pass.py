@@ -1,0 +1,186 @@
+"""iraudit invariant pass: checks over the traced jaxpr + compiled HLO.
+
+Four invariants, each with an ``IRxxx`` code (mirroring tapaslint's
+``TLxxx`` so ``scripts/iraudit.py --explain IR002`` works the same way):
+
+IR001  no forbidden primitives on a hot path
+IR002  every declared donation is consumed (buffer actually aliased)
+IR003  dtype discipline: no f32/f64 matmul inputs in a bf16 graph
+IR004  closure-constant census under the per-entry byte cap
+
+There is deliberately no waiver mechanism: a finding either gets fixed or
+the entry's declaration (e.g. ``f32_dot_ok`` for the Pallas kernel
+bodies) is changed in the registry, in review, next to the reason.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.analysis.hlo_cost import HloModuleCost
+from repro.analysis.iraudit.jaxprs import const_census, iter_eqns
+from repro.analysis.iraudit.registry import EntryAudit
+
+# Host round-trips and transfers have no business inside a decode horizon:
+# one callback inside a lax.scan body is a per-step host sync on real
+# accelerators, exactly the class TAPAS's ms-scale envelope cannot absorb.
+FORBIDDEN_PRIMS = {
+    "pure_callback": "host callback inside a jitted hot path",
+    "io_callback": "host I/O callback inside a jitted hot path",
+    "debug_callback": "debug callback (jax.debug.*) left in a hot path",
+    "infeed": "host infeed in a hot path",
+    "outfeed": "host outfeed in a hot path",
+    "device_put": "mid-trace device_put (host constant uploaded per call)",
+}
+
+INVARIANTS = {
+    "IR001": ("forbidden-primitive", """\
+The jaxpr contains a primitive that forces a host round-trip (callbacks,
+infeed/outfeed) or a mid-trace transfer (device_put).  Inside a fused
+decode horizon each of these is a per-step host sync: the 5.6x host-sync
+reduction the horizon exists for silently evaporates, and on TPU the
+runtime stalls the pipeline.  Fix: compute the value on device, pass it
+as an argument, or hoist the transfer out of the traced function.
+No waivers — serving hot paths must be clean."""),
+    "IR002": ("donation-unconsumed", """\
+An argument declared in ``donate_argnums`` was NOT aliased into the
+outputs by XLA (missing from the compiled module's input_output_alias
+table).  The donation silently degrades to a copy: for the paged KV pool
+that doubles peak memory on every decode launch, which is precisely what
+donation was declared to avoid.  Usual causes: dtype/shape mismatch
+between the donated input and the output it should alias, or the donated
+buffer not flowing to any output at all.  Fix the graph (or drop the
+false declaration) — do not waive it."""),
+    "IR003": ("dtype-discipline", """\
+A matmul (dot_general) in a bf16-configured graph takes f32/f64 inputs.
+Accumulating in f32 (``preferred_element_type``) is deliberate and fine;
+*feeding* f32 operands doubles the MXU-side bandwidth and usually means
+an upcast leaked in (a ``.astype`` lost, an f32 softmax output fed
+straight into the PV matmul).  Entries whose kernels upcast by design
+(Pallas flash-attention bodies) opt out via ``f32_dot_ok`` in the
+registry, in review."""),
+    "IR004": ("closure-constant-cap", """\
+The traced function closes over more constant bytes than its registry
+cap.  Closure constants are baked into the executable AND re-uploaded
+alongside the arguments at dispatch; a big captured table (np.ndarray,
+list of floats) is re-sent every call — the dynamic twin of tapaslint
+TL008.  Fix: pass the array as an argument, or compute it inside the
+trace from scalars.  If the constant is genuinely tiny and fixed (rope
+frequencies), raise the entry's cap in the registry, in review."""),
+    "IR005": ("budget-drift", """\
+A cost metric moved outside its tolerance against the checked-in
+``benchmarks/BUDGET_ir.json`` (or the op census changed shape).  This is
+how an accidental broadcast blowup, a dead computation, or a lost
+donation shows up before any TPU time is spent.  If the change is
+intended, re-record with ``scripts/iraudit.py --update-budgets`` and
+commit the diff — reviewers then see the cost delta next to the code
+that caused it."""),
+}
+
+_ALIAS_RE = re.compile(r"input_output_alias=\{")
+
+
+@dataclass(frozen=True)
+class IRFinding:
+    entry: str       # entrypoint name
+    code: str        # IRxxx
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.code} {self.entry}: {self.message}"
+
+
+def hlo_aliased_params(hlo: str) -> set:
+    """Flat parameter indices aliased to outputs, from the module header's
+    ``input_output_alias={ {out}: (param, {}, may-alias), ... }`` table."""
+    m = _ALIAS_RE.search(hlo)
+    if not m:
+        return set()
+    depth, i = 1, m.end()
+    while i < len(hlo) and depth:
+        depth += (hlo[i] == "{") - (hlo[i] == "}")
+        i += 1
+    body = hlo[m.end():i - 1]
+    return {int(p) for p in re.findall(r"\(\s*(\d+)\s*,", body)}
+
+
+def hlo_entry_param_count(hlo: str) -> int:
+    mod = HloModuleCost(hlo)
+    instrs = mod.computations.get(mod.entry, [])
+    return sum(1 for i in instrs if i.opcode == "parameter")
+
+
+def _check_forbidden(audit: EntryAudit) -> list:
+    found = []
+    for eqn, _ in iter_eqns(audit.jaxpr.jaxpr):
+        name = eqn.primitive.name
+        if name in FORBIDDEN_PRIMS:
+            found.append(IRFinding(
+                audit.entry.name, "IR001",
+                f"{name}: {FORBIDDEN_PRIMS[name]}"))
+    return found
+
+
+def _check_donation(audit: EntryAudit) -> list:
+    declared = set(audit.donated_idx)
+    if not declared:
+        return []
+    n_params = hlo_entry_param_count(audit.hlo)
+    if n_params != len(audit.arg_leaves):
+        # jit pruned unused args — index spaces differ; a pruned *donated*
+        # arg cannot be aliased, so report the discrepancy head-on.
+        return [IRFinding(
+            audit.entry.name, "IR002",
+            f"compiled entry has {n_params} params for "
+            f"{len(audit.arg_leaves)} traced arg leaves (unused args "
+            f"pruned?) — donated buffers cannot be verified; make every "
+            f"donated arg reach an output")]
+    aliased = hlo_aliased_params(audit.hlo)
+    out = []
+    for i in sorted(declared - aliased):
+        leaf = audit.arg_leaves[i]
+        out.append(IRFinding(
+            audit.entry.name, "IR002",
+            f"donated arg leaf {i} ({leaf.dtype}{list(leaf.shape)}) is "
+            f"not aliased into any output — donation degraded to a copy"))
+    return out
+
+
+def _check_dtypes(audit: EntryAudit) -> list:
+    if audit.entry.f32_dot_ok:
+        return []
+    wide = (np.dtype(np.float32), np.dtype(np.float64))
+    out = []
+    for eqn, _ in iter_eqns(audit.jaxpr.jaxpr):
+        if eqn.primitive.name != "dot_general":
+            continue
+        bad = [str(v.aval.dtype) for v in eqn.invars
+               if getattr(v.aval, "dtype", None) is not None
+               and np.dtype(v.aval.dtype) in wide]
+        if bad:
+            shapes = " x ".join(
+                f"{v.aval.dtype}{list(v.aval.shape)}" for v in eqn.invars)
+            out.append(IRFinding(
+                audit.entry.name, "IR003",
+                f"dot_general with wide inputs ({shapes}) in a "
+                f"bf16-configured graph"))
+    return out
+
+
+def _check_consts(audit: EntryAudit) -> list:
+    count, total, rows = const_census(audit.jaxpr)
+    if total <= audit.entry.const_cap_bytes:
+        return []
+    head = ", ".join(f"{dt}{list(sh)}={b}B" for dt, sh, b in rows[:4])
+    return [IRFinding(
+        audit.entry.name, "IR004",
+        f"{count} closure constants totalling {total}B exceed the "
+        f"{audit.entry.const_cap_bytes}B cap ({head})")]
+
+
+def run_invariants(audit: EntryAudit) -> list:
+    """All IR001-IR004 findings for one audited entrypoint."""
+    return (_check_forbidden(audit) + _check_donation(audit)
+            + _check_dtypes(audit) + _check_consts(audit))

@@ -6,6 +6,7 @@ from repro.analysis.lint.rules.tl004_dataclass_copy import DataclassCopyRule
 from repro.analysis.lint.rules.tl005_units import UnitSuffixRule
 from repro.analysis.lint.rules.tl006_protocol import ProtocolConformanceRule
 from repro.analysis.lint.rules.tl007_swallowed_error import SwallowedErrorRule
+from repro.analysis.lint.rules.tl008_np_const import NpConstRule
 
 ALL_RULES = [
     DeterminismRule(),
@@ -15,6 +16,7 @@ ALL_RULES = [
     UnitSuffixRule(),
     ProtocolConformanceRule(),
     SwallowedErrorRule(),
+    NpConstRule(),
 ]
 
 RULES_BY_CODE = {r.code: r for r in ALL_RULES}

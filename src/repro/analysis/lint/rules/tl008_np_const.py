@@ -1,0 +1,134 @@
+"""TL008 — host-constant hazard: no per-call ``np.*`` construction or
+closure-captured numpy/list constants inside traced functions."""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint.framework import Rule
+
+EXPLAIN = """\
+TL008 host-constant hazard — traced code must not manufacture host
+arrays.
+
+A ``np.asarray``/``np.arange``/list-literal constant used inside a
+jitted function is captured as a *closure constant*: it gets baked into
+the executable AND re-uploaded alongside the arguments at every
+dispatch.  At decode rates (one launch per fused horizon) that is a
+recurring host->device transfer the profile never attributes to you —
+and if the value differs between calls it silently retraces instead
+(TL003's cousin).  ``scripts/iraudit.py`` measures the same hazard
+dynamically: IR004 caps the closure-constant bytes of every registered
+hot path, and the ``const_bytes`` budget row pins them.
+
+Flags, inside traced functions only:
+  * ``np.<ctor>(...)`` calls (arange/zeros/ones/full/linspace/eye/
+    concatenate/stack/...) — per-call host construction.  ``np.array``/
+    ``np.asarray`` are deliberately NOT here: on a traced value they
+    *concretize* it, which is TL002's host-sync finding;
+  * reads of module-level names bound to an ``np.<ctor>(...)`` result or
+    a numeric list/tuple literal — the captured-constant form.
+
+Fix: build the value with ``jnp.*`` inside the trace (it becomes a
+device constant, folded at compile time), pass it as an argument, or —
+for genuinely tiny fixed tables like rope frequencies — keep it and
+raise the entry's cap in the iraudit registry, in review.  ``np.*`` in
+host-side code (setup, mirrors, benches) is fine and unflagged.
+"""
+
+#: pure constructors: flagged per call inside traced code.  array/asarray
+#: belong to TL002 there (coercion = host sync), but still mark a
+#: module-level binding as a captured host constant.
+_NP_CTORS = {"arange", "zeros", "ones", "full",
+             "linspace", "logspace", "eye", "empty", "identity",
+             "zeros_like", "ones_like", "full_like", "concatenate",
+             "stack", "meshgrid", "tri", "tril", "triu", "loadtxt"}
+_NP_MODULE_CTORS = _NP_CTORS | {"array", "asarray"}
+
+
+def _numpy_aliases(tree: ast.AST) -> set:
+    names = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "numpy":
+                    names.add(a.asname or "numpy")
+    return names
+
+
+def _is_numeric_literal_seq(value: ast.AST) -> bool:
+    """A (possibly nested) list/tuple literal of numbers."""
+    if isinstance(value, (ast.List, ast.Tuple)):
+        return bool(value.elts) and all(
+            _is_numeric_literal_seq(e) or (
+                isinstance(e, ast.Constant)
+                and isinstance(e.value, (int, float, complex))
+                and not isinstance(e.value, bool))
+            for e in value.elts)
+    return False
+
+
+class NpConstRule(Rule):
+    code = "TL008"
+    name = "host-constant"
+    scopes = ("src/repro/serving", "src/repro/models", "src/repro/kernels")
+    EXPLAIN = EXPLAIN
+
+    def _np_ctor_call(self, node: ast.Call, np_names: set,
+                      ctors: set = _NP_CTORS) -> str | None:
+        f = node.func
+        if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+                and f.value.id in np_names and f.attr in ctors:
+            return f"{f.value.id}.{f.attr}"
+        return None
+
+    def _module_constants(self, ctx, np_names: set) -> dict:
+        """Module-level ``NAME = np.ctor(...)`` / numeric-literal-seq
+        bindings: name -> short description."""
+        consts = {}
+        for stmt in ctx.tree.body:
+            if isinstance(stmt, ast.Assign):
+                targets, value = stmt.targets, stmt.value
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                targets, value = [stmt.target], stmt.value
+            else:
+                continue
+            desc = None
+            if isinstance(value, ast.Call):
+                ctor = self._np_ctor_call(value, np_names, _NP_MODULE_CTORS)
+                if ctor is not None:
+                    desc = f"{ctor}(...)"
+            elif _is_numeric_literal_seq(value):
+                desc = "numeric list/tuple literal"
+            if desc is None:
+                continue
+            for t in targets:
+                if isinstance(t, ast.Name):
+                    consts[t.id] = desc
+        return consts
+
+    def check(self, ctx):
+        np_names = _numpy_aliases(ctx.tree)
+        traced = ctx.traced_functions
+        mod_consts = self._module_constants(ctx, np_names)
+        for node in ast.walk(ctx.tree):
+            fn = ctx.enclosing_function(node)
+            if fn is None or fn not in traced:
+                continue
+            if isinstance(node, ast.Call) and np_names:
+                ctor = self._np_ctor_call(node, np_names)
+                if ctor is not None:
+                    yield from self.emit(
+                        ctx, node,
+                        f"{ctor}(...) inside a traced function builds a "
+                        "host constant per call (re-uploaded at every "
+                        "dispatch; IR004's census is the dynamic check) — "
+                        "use jnp.* or pass it as an argument")
+            elif isinstance(node, ast.Name) \
+                    and isinstance(node.ctx, ast.Load) \
+                    and node.id in mod_consts:
+                yield from self.emit(
+                    ctx, node,
+                    f"module constant '{node.id}' ({mod_consts[node.id]}) "
+                    "captured by a traced function: baked into the "
+                    "executable and re-sent per dispatch — make it a jnp "
+                    "constant inside the trace or an explicit argument")

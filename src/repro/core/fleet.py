@@ -68,7 +68,7 @@ class RegionSpec:
     name: str
     dc: DCConfig = field(default_factory=DCConfig)
     wan_rtt_ms: float = 20.0      # RTT to the fleet's user front door
-    power_price: float = 1.0      # relative $/kWh (admission preference)
+    power_price_scale: float = 1.0  # relative $/kWh multiplier (admission preference)
     carbon_scale: float = 1.0     # grid dirtiness vs the fleet-mean grid
     weather: tuple = ()           # WeatherShift schedule for this region
     trace_namespace: str | None = None
@@ -90,9 +90,9 @@ class RegionSpec:
                              f"got {self.name!r}")
         if self.wan_rtt_ms < 0.0:
             raise ValueError(f"wan_rtt_ms must be >= 0, got {self.wan_rtt_ms}")
-        if self.power_price <= 0.0:
+        if self.power_price_scale <= 0.0:
             raise ValueError(
-                f"power_price must be > 0, got {self.power_price}")
+                f"power_price_scale must be > 0, got {self.power_price_scale}")
         if self.carbon_scale <= 0.0:
             raise ValueError(
                 f"carbon_scale must be > 0, got {self.carbon_scale}")
@@ -143,7 +143,7 @@ class FleetState:
     headroom: dict                 # name -> capacity - natural demand
     demand: dict                   # endpoint -> {name: natural demand}
     price: dict = field(default_factory=dict)   # name -> effective $/kWh
-    #                                             (shock-scaled power_price)
+    #                                             (shock-scaled power_price_scale)
     telemetry_age: dict = field(default_factory=dict)  # name -> ticks the
     #                                             region's telemetry has been
     #                                             stale (SensorDropout)
@@ -289,7 +289,7 @@ class GlobalTapasRouter:
         self._cost: dict = {}    # (endpoint, origin) -> held cost-move frac
 
     def admit_region(self, fleet: FleetState, vm: VMArrival) -> str | None:
-        cands = [(fleet.risk[n], fleet.specs[n].power_price,
+        cands = [(fleet.risk[n], fleet.specs[n].power_price_scale,
                   fleet.specs[n].wan_rtt_ms, n)
                  for n in sorted(fleet.regions) if fleet.free_servers(n) > 0]
         return min(cands)[3] if cands else None
@@ -501,14 +501,14 @@ class FleetResult:
     unserved_frac: float           # fleet-wide, demand-weighted
     mean_quality: float
     energy_kwh: float = 0.0        # fleet IT energy drawn over the run
-    energy_cost: float = 0.0       # sum of kWh x effective power price
+    energy_cost_kwh: float = 0.0   # price-weighted kWh (power_price_scale is unitless)
     carbon_kg: float = 0.0         # sum of kWh x grid carbon intensity
 
     def blended_cost(self, carbon_weight: float = 0.5) -> float:
         """The objective cost-aware steering minimizes: served energy
         weighted by the blended price/carbon index (see
         ``risk.energy_cost_index``), integrated over the run."""
-        return ((1.0 - carbon_weight) * self.energy_cost
+        return ((1.0 - carbon_weight) * self.energy_cost_kwh
                 + carbon_weight * self.carbon_kg)
 
     def summary(self) -> dict:
@@ -528,7 +528,7 @@ class FleetResult:
             "migrations_failed": self.migrations_failed,
             "fleet_admissions": self.fleet_admissions,
             "energy_kwh": self.energy_kwh,
-            "energy_cost": self.energy_cost,
+            "energy_cost": self.energy_cost_kwh,
             "carbon_kg": self.carbon_kg,
             "regions": {n: r.summary() for n, r in self.regions.items()},
         }
@@ -639,7 +639,7 @@ class FleetSim:
         self._mig_failed = 0
         self._admissions = 0
         self._energy_kwh = 0.0
-        self._energy_cost = 0.0
+        self._energy_cost_kwh = 0.0
         self._carbon_kg = 0.0
         self._prev_energy = dict.fromkeys(self.sims, 0.0)
         # migrations whose dest placement has not been confirmed yet:
@@ -684,7 +684,7 @@ class FleetSim:
                 natural[name] += float(d)
         headroom = {n: capacity[n] - natural[n] for n in states}
         now = float(self.t_h[self.tick])
-        price = {n: self.specs[n].power_price
+        price = {n: self.specs[n].power_price_scale
                  * self._scenario.price_scale(now, n) for n in states}
         carbon = {n: float(self._carbon[n][self.tick]) for n in states}
         return FleetState(
@@ -808,7 +808,7 @@ class FleetSim:
             kwh = sim._energy_kwh - self._prev_energy[name]
             self._prev_energy[name] = sim._energy_kwh
             self._energy_kwh += kwh
-            self._energy_cost += kwh * fleet.price[name]
+            self._energy_cost_kwh += kwh * fleet.price[name]
             self._carbon_kg += kwh * fleet.carbon[name]
         self.tick += 1
         self.last_state = fleet
@@ -831,7 +831,7 @@ class FleetSim:
             fleet_admissions=self._admissions,
             unserved_frac=unserved / max(demand, 1e-9),
             mean_quality=q_acc / max(q_w, 1e-9),
-            energy_kwh=self._energy_kwh, energy_cost=self._energy_cost,
+            energy_kwh=self._energy_kwh, energy_cost_kwh=self._energy_cost_kwh,
             carbon_kg=self._carbon_kg)
 
     def run(self) -> FleetResult:

@@ -154,7 +154,7 @@ class PriceShock:
     """
     start_h: float
     end_h: float
-    scale: float                  # multiplier on power_price (> 0)
+    scale: float                  # multiplier on power_price_scale (> 0)
     region: str | None = None     # None == every region
 
     def __post_init__(self):

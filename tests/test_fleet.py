@@ -204,8 +204,8 @@ def test_region_spec_validation():
         RegionSpec("")
     with pytest.raises(ValueError, match="wan_rtt_ms"):
         RegionSpec("x", wan_rtt_ms=-1.0)
-    with pytest.raises(ValueError, match="power_price"):
-        RegionSpec("x", power_price=0.0)
+    with pytest.raises(ValueError, match="power_price_scale"):
+        RegionSpec("x", power_price_scale=0.0)
     with pytest.raises(TypeError, match="WeatherShift"):
         RegionSpec("x", weather=(DemandSurge(start_h=0.0, end_h=1.0,
                                              scale=2.0),))

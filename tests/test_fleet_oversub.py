@@ -253,7 +253,7 @@ SMALL = DCConfig(n_rows=2, racks_per_row=4, servers_per_rack=1)
 
 def _tiny_cfg(scenario=None, price=2.0, **kw):
     return FleetConfig(
-        regions=(RegionSpec("solo", dc=SMALL, power_price=price),),
+        regions=(RegionSpec("solo", dc=SMALL, power_price_scale=price),),
         horizon_h=4.0, tick_min=30.0, seed=0, policy=TAPAS,
         scenario=scenario, **kw)
 
@@ -265,10 +265,10 @@ def test_fleet_energy_accounting_consistent():
     assert res.energy_kwh == pytest.approx(
         sum(r.energy_kwh for r in res.regions.values()), rel=1e-9)
     # constant price, no shocks: cost is exactly price x energy
-    assert res.energy_cost == pytest.approx(2.0 * res.energy_kwh, rel=1e-9)
+    assert res.energy_cost_kwh == pytest.approx(2.0 * res.energy_kwh, rel=1e-9)
     # carbon integrates the bounded intensity trace
     assert 0.3 * res.energy_kwh <= res.carbon_kg <= 1.8 * res.energy_kwh
-    assert res.blended_cost(0.0) == pytest.approx(res.energy_cost)
+    assert res.blended_cost(0.0) == pytest.approx(res.energy_cost_kwh)
     assert res.blended_cost(1.0) == pytest.approx(res.carbon_kg)
 
 
@@ -280,7 +280,7 @@ def test_price_shock_raises_cost_not_energy():
     # prices never touch the physics...
     assert shocked.energy_kwh == pytest.approx(calm.energy_kwh, rel=1e-9)
     # ...but the bill integrates the spike
-    assert shocked.energy_cost > calm.energy_cost
+    assert shocked.energy_cost_kwh > calm.energy_cost_kwh
 
 
 def test_planner_validates_inputs():

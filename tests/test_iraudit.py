@@ -1,0 +1,215 @@
+"""iraudit lane tests: golden op-census snapshots, invariant teeth on
+synthetic entrypoints, and budget pins for the defects the audit caught.
+
+The golden snapshots and the full-registry gate compare against
+``benchmarks/BUDGET_ir.json`` and therefore skip under a jax/jaxlib
+toolchain other than the one the budgets were recorded under (CI installs
+the pinned pair, so there they always run).  The synthetic-entrypoint and
+synthetic-HLO tests are toolchain-independent.
+"""
+from __future__ import annotations
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import jaxlib
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_cost import HloModuleCost
+from repro.analysis.iraudit import (ENTRYPOINTS, ENTRYPOINTS_BY_NAME,
+                                    AuditContext, Entrypoint, audit_entry,
+                                    census_diff, check_budgets, cost_metrics,
+                                    load_budgets, run_invariants)
+
+pytestmark = pytest.mark.slow
+
+BUDGETS = pathlib.Path(__file__).resolve().parent.parent / "benchmarks" \
+    / "BUDGET_ir.json"
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _pinned_entries():
+    payload = load_budgets(BUDGETS)
+    meta = payload["meta"]
+    if (meta["jax"], meta["jaxlib"]) != (jax.__version__, jaxlib.__version__):
+        pytest.skip(f"budgets pinned under jax {meta['jax']} / jaxlib "
+                    f"{meta['jaxlib']}; running {jax.__version__} / "
+                    f"{jaxlib.__version__}")
+    return payload
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return AuditContext()
+
+
+@pytest.fixture(scope="module")
+def audits(ctx):
+    """Lazily audit registry entries once per module."""
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cache[name] = audit_entry(ENTRYPOINTS_BY_NAME[name], ctx)
+        return cache[name]
+
+    return get
+
+
+# ---------------------------------------------------------------------------
+# golden op-census snapshots
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["decode_step_paged", "decode_spec_paged_k4"])
+def test_golden_op_census(audits, name):
+    """The primitive census of the decode hot paths is a golden snapshot:
+    any added/removed/changed primitive fails with the diff."""
+    pinned = _pinned_entries()["entries"][name]["census"]
+    got = cost_metrics(audits(name))["census"]
+    assert got == pinned, \
+        f"op census drift for {name}: {census_diff(pinned, got)}"
+
+
+def test_registry_invariants_clean_and_budgets_hold(audits):
+    """The real registry: zero invariant findings, and every cost row
+    within its pinned budget — the same gate CI runs."""
+    pinned = _pinned_entries()
+    rows = {}
+    for e in ENTRYPOINTS:
+        a = audits(e.name)
+        findings = run_invariants(a)
+        assert findings == [], "\n".join(str(f) for f in findings)
+        rows[e.name] = cost_metrics(a)
+    problems = check_budgets(rows, pinned)
+    assert problems == [], "\n".join(problems)
+
+
+# ---------------------------------------------------------------------------
+# regression pins for the defects the audit caught
+# ---------------------------------------------------------------------------
+
+def test_bad_lane_scan_keeps_isfinite_in_bf16(audits):
+    """Defect pin: the quarantine sweep once upcast every gathered pool
+    view to f32 just to call isfinite (bf16->f32 is exact, the upcast
+    only cost bytes).  The f32 output surface of the scan must stay 0."""
+    m = cost_metrics(audits("pool_bad_lane_scan"))
+    assert m["f32_out_bytes"] == 0
+    pinned = _pinned_entries()["entries"]["pool_bad_lane_scan"]
+    assert pinned["f32_out_bytes"] == 0
+
+
+def test_horizon_flops_scale_with_steps(audits):
+    """Defect pin: hlo_cost once skipped ``conditional`` branch bodies
+    entirely, so the fused horizon (whose hot loop sits behind a
+    lax.cond) costed ~0 FLOPs.  num_steps=4 must cost ~4x one step."""
+    step = cost_metrics(audits("decode_step_paged"))["flops"]
+    multi = cost_metrics(audits("decode_multi_paged_h4"))["flops"]
+    assert 3.0 * step <= multi <= 6.0 * step, (step, multi)
+
+
+def test_hlo_cost_counts_conditional_and_call_bodies():
+    """Synthetic HLO: a dot behind ``branch_computations`` and one behind
+    ``to_apply`` both count (max-cost branch; called body inline)."""
+    hlo = """
+%noop (p: f32[4,4]) -> f32[4,4] {
+  ROOT %p = f32[4,4]{1,0} parameter(0)
+}
+
+%branch_dot (q: f32[4,4]) -> f32[4,4] {
+  %q = f32[4,4]{1,0} parameter(0)
+  ROOT %d = f32[4,4]{1,0} dot(%q, %q), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%called_dot (r: f32[4,4]) -> f32[4,4] {
+  %r = f32[4,4]{1,0} parameter(0)
+  ROOT %d2 = f32[4,4]{1,0} dot(%r, %r), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+ENTRY %main (i: s32[], x: f32[4,4]) -> f32[4,4] {
+  %i = s32[] parameter(0)
+  %x = f32[4,4]{1,0} parameter(1)
+  %c = f32[4,4]{1,0} conditional(%i, %x, %x), branch_computations={%noop, %branch_dot}
+  ROOT %call = f32[4,4]{1,0} call(%c), to_apply=%called_dot
+}
+"""
+    cost = HloModuleCost(hlo).cost()
+    # two dots at 2*4*4*4 flops each; the empty branch contributes nothing
+    assert cost.flops == 2 * (2 * 4 * 4 * 4)
+
+
+# ---------------------------------------------------------------------------
+# invariant teeth (synthetic entrypoints; no AuditContext needed)
+# ---------------------------------------------------------------------------
+
+def _synthetic(name, fn, args, kwargs=None, **entry_kw):
+    e = Entrypoint(name, "model",
+                   lambda _ctx: (fn, args, kwargs or {}), **entry_kw)
+    return audit_entry(e, None)
+
+
+def test_ir001_flags_host_callbacks():
+    def f(x):
+        jax.debug.callback(lambda v: None, x)
+        return x + 1.0
+
+    audit = _synthetic("syn_cb", jax.jit(f), (_sds((4,), jnp.float32),))
+    fnd = run_invariants(audit)
+    assert any(f.code == "IR001" and "debug_callback" in f.message
+               for f in fnd), fnd
+
+
+@pytest.mark.filterwarnings(
+    "ignore:Some donated buffers were not usable")
+def test_ir002_flags_unconsumed_donation():
+    def f(a, b):
+        return a[:2] * b[:2]     # output too small to alias the donated a
+
+    fn = jax.jit(f, donate_argnums=(0,))
+    audit = _synthetic("syn_don", fn,
+                       (_sds((4,), jnp.float32), _sds((4,), jnp.float32)))
+    fnd = run_invariants(audit)
+    assert any(f.code == "IR002" for f in fnd), fnd
+
+
+def test_ir003_flags_wide_dot_inputs():
+    def f(a, b):
+        return a @ b
+
+    audit = _synthetic("syn_f32dot", jax.jit(f),
+                       (_sds((4, 4), jnp.float32), _sds((4, 4), jnp.float32)))
+    fnd = run_invariants(audit)
+    assert any(f.code == "IR003" for f in fnd), fnd
+    # the same graph is clean when the registry opts it out
+    waived = _synthetic("syn_f32dot_ok", jax.jit(f),
+                        (_sds((4, 4), jnp.float32),
+                         _sds((4, 4), jnp.float32)), f32_dot_ok=True)
+    assert [f for f in run_invariants(waived) if f.code == "IR003"] == []
+
+
+def test_ir004_flags_closure_constants_over_cap():
+    table = np.arange(1024, dtype=np.float32)   # 4096 B closure constant
+
+    def f(x):
+        return x * table
+
+    audit = _synthetic("syn_const", jax.jit(f),
+                       (_sds((1024,), jnp.float32),), const_cap_bytes=256)
+    fnd = run_invariants(audit)
+    assert any(f.code == "IR004" and "4096B" in f.message
+               for f in fnd), fnd
+
+
+def test_clean_synthetic_has_no_findings():
+    def f(a, b):
+        c = (a * b).astype(jnp.bfloat16)
+        return c @ c.T
+
+    audit = _synthetic("syn_clean", jax.jit(f),
+                       (_sds((4, 4), jnp.bfloat16), _sds((4, 4),
+                                                         jnp.bfloat16)))
+    assert run_invariants(audit) == []

@@ -465,6 +465,82 @@ def test_tl007_suppression():
 
 
 # ---------------------------------------------------------------------------
+# TL008 host-constant hazard (scoped to serving/models/kernels)
+# ---------------------------------------------------------------------------
+
+def test_tl008_flags_np_ctor_inside_traced_function():
+    fs = {SERVING: """\
+    import jax
+    import numpy as np
+
+    @jax.jit
+    def decode_mask(x):
+        idx = np.arange(x.shape[-1])
+        return x * np.full(2, 0.5, np.float32)[idx % 2]
+    """}
+    fnd = run(fs)
+    assert [f.rule for f in fnd] == ["TL008", "TL008"]
+    assert "np.arange" in fnd[0].message
+    assert "np.full" in fnd[1].message
+
+
+def test_tl008_flags_captured_module_constants():
+    fs = {MODELS: """\
+    import jax
+    import numpy as np
+
+    FREQS = np.linspace(0.0, 1.0, 64)
+    WARP = [1.0, 0.5, 0.25]
+
+    @jax.jit
+    def decode_step(x):
+        return x * FREQS + WARP[0]
+    """}
+    fnd = run(fs)
+    assert [f.rule for f in fnd] == ["TL008", "TL008"]
+    assert "'FREQS'" in fnd[0].message and "np.linspace" in fnd[0].message
+    assert "'WARP'" in fnd[1].message and "list" in fnd[1].message
+
+
+def test_tl008_quiet_on_jnp_host_code_and_out_of_scope():
+    fs = {SERVING: """\
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    TABLE = np.zeros(8)          # host mirror: fine outside a trace
+
+    @jax.jit
+    def decode_step(x):
+        return x + jnp.arange(x.shape[-1])   # jnp stays on device
+
+    def host_pump(reqs):
+        lanes = np.zeros(len(reqs), np.int32)
+        return lanes, TABLE
+    """, CORE: """\
+    import jax
+    import numpy as np
+
+    @jax.jit
+    def blend(x):
+        return x * np.asarray([0.5])   # core/ is out of TL008 scope
+    """}
+    assert codes(fs) == []
+
+
+def test_tl008_suppression():
+    fs = {MODELS: """\
+    import jax
+    import numpy as np
+
+    @jax.jit
+    def decode_step(x):  # tapaslint: disable=TL008
+        return x + np.arange(2.0)
+    """}
+    assert codes(fs) == []
+
+
+# ---------------------------------------------------------------------------
 # framework: syntax errors, baseline diff, key stability
 # ---------------------------------------------------------------------------
 
