@@ -32,7 +32,7 @@ for p in (str(_ROOT), str(_ROOT / "src")):
 from benchmarks.common import RESULTS  # noqa: E402
 # the drill itself lives with the example so the CI example smoke and the
 # recorded bench numbers can never drift apart
-from examples.fault_storm import build_model_once, run_drill  # noqa: E402
+from examples.fault_storm import drill_spec, run_drill  # noqa: E402
 from repro.core.faults import recovery_off  # noqa: E402
 
 CHECKED_IN = _ROOT / "benchmarks" / "BENCH_resilience.json"
@@ -42,13 +42,13 @@ CHECKED_IN = _ROOT / "benchmarks" / "BENCH_resilience.json"
 MIN_LOSS = 1e-3
 
 
-def run_arms(seed: int, model, params) -> dict:
+def run_arms(seed: int, share) -> dict:
     arms = {}
     for label, storm, knobs in (("fault_free", False, None),
                                 ("recovery_on", True, None),
                                 ("recovery_off", True, recovery_off())):
         arms[label] = run_drill(seed=seed, storm=storm, knobs=knobs,
-                                model=model, params=params)
+                                share=share)
     free = max(arms["fault_free"]["goodput_tokens"], 1)
     ratio_on = arms["recovery_on"]["goodput_tokens"] / free
     ratio_off = arms["recovery_off"]["goodput_tokens"] / free
@@ -79,9 +79,9 @@ def main() -> None:
     ap.add_argument("--seeds", type=int, default=2)
     args = ap.parse_args()
 
-    model, params = build_model_once()
+    share = drill_spec().build()
     seeds = [0] if args.smoke else list(range(args.seeds))
-    per_seed = {seed: run_arms(seed, model, params) for seed in seeds}
+    per_seed = {seed: run_arms(seed, share) for seed in seeds}
     agg = {
         "min_recovery_goodput_ratio": min(
             per_seed[s]["recovery_goodput_ratio"] for s in seeds),

@@ -15,16 +15,13 @@ mid-run, so the knob turns are observable in the printed trace.
 
     PYTHONPATH=src python examples/engine_in_the_loop.py
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.core.datacenter import DCConfig
 from repro.core.scenario import DemandSurge, FailureEvent, Scenario
 from repro.core.simulator import TAPAS, ClusterSim, SimConfig
-from repro.models import build_model, local_plan
-from repro.serving import Engine, EngineBackend, EngineKnobs
+from repro.serving import Engine, EngineBackend, EngineSpec
 
 N_BACKENDS = 2
 
@@ -32,14 +29,8 @@ N_BACKENDS = 2
 def build_engine(seed: int) -> Engine:
     cfg = get_config("llama2-7b").smoke_config()
     small = cfg.replace(num_layers=1, d_ff=64, name="llama2-smaller")
-    plan = local_plan(param_dtype=jnp.bfloat16)
-    model = build_model(cfg, plan)
-    model_small = build_model(small, plan)
-    eng = Engine(model, model.init(jax.random.PRNGKey(seed)), max_seq=96,
-                 n_slots=4, knobs=EngineKnobs(max_batch=4), paged=True)
-    eng.add_variant("small", model_small,
-                    model_small.init(jax.random.PRNGKey(seed + 10)))
-    return eng
+    return EngineSpec(cfg, max_seq=96, n_slots=4, max_batch=4, seed=seed,
+                      variants=(("small", small),)).build()
 
 
 def main() -> None:

@@ -26,8 +26,6 @@ drift apart.
 
     PYTHONPATH=src python examples/fault_storm.py
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
@@ -37,8 +35,7 @@ from repro.core.faults import (DegradationLadder, EngineFault,
                                audit_requests, recovery_off)
 from repro.core.scenario import FailureEvent, Scenario
 from repro.core.simulator import TAPAS, ClusterSim, SimConfig
-from repro.models import build_model, local_plan
-from repro.serving import Engine, EngineBackend, EngineKnobs
+from repro.serving import Engine, EngineBackend, EngineSpec
 
 #: drill clock (hours): cooling fails mid-run; the storm lands inside it
 HORIZON_H, TICK_MIN = 2.0, 5.0
@@ -48,15 +45,14 @@ NAN_BURST = (1.0, 1.1)      # second backed server's KV goes NaN
 DROPOUT = (0.8, 1.3)        # telemetry frozen past the emergency's end
 
 
-def build_model_once():
+def drill_spec() -> EngineSpec:
     cfg = get_config("llama2-7b").smoke_config()
-    model = build_model(cfg, local_plan(param_dtype=jnp.bfloat16))
-    return model, model.init(jax.random.PRNGKey(0))
+    return EngineSpec(cfg, max_seq=96, n_slots=4, max_batch=4, block_size=8)
 
 
-def _make_engine(model, params) -> Engine:
-    return Engine(model, params, max_seq=96, n_slots=4, block_size=8,
-                  knobs=EngineKnobs(max_batch=4), paged=True)
+def _make_engine(share: Engine) -> Engine:
+    # every arm's engines alias the one weight copy held by ``share``
+    return drill_spec().build(share=share)
 
 
 def _sim(dc: DCConfig, seed: int, scenario: Scenario,
@@ -68,7 +64,7 @@ def _sim(dc: DCConfig, seed: int, scenario: Scenario,
 
 
 def run_drill(*, seed: int, storm: bool, knobs: ResilienceKnobs | None,
-              model, params) -> dict:
+              share: Engine) -> dict:
     """One arm of the drill; returns the audited outcome summary.
 
     The workload is identical across arms for a given ``seed`` (the
@@ -110,7 +106,7 @@ def run_drill(*, seed: int, storm: bool, knobs: ResilienceKnobs | None,
         if sim.tick == attach_tick and not backends:
             for srv in saas[:2]:
                 bk = EngineBackend(
-                    _make_engine(model, params), seed=srv,
+                    _make_engine(share), seed=srv,
                     max_new_tokens=8, steps_per_tick=5,
                     ladder=DegradationLadder() if res.ladder else None,
                     deadline_ms=3_600_000.0)
@@ -140,7 +136,7 @@ def run_drill(*, seed: int, storm: bool, knobs: ResilienceKnobs | None,
 
 
 def main() -> None:
-    model, params = build_model_once()
+    share = drill_spec().build()
     print("fault-storm drill: cooling failure + engine crash + NaN burst "
           "+ sensor dropout\n")
     arms = {}
@@ -148,7 +144,7 @@ def main() -> None:
                                 ("recovery_on", True, None),
                                 ("recovery_off", True, recovery_off())):
         arms[label] = r = run_drill(seed=0, storm=storm, knobs=knobs,
-                                    model=model, params=params)
+                                    share=share)
         print(f"{label:13s} goodput={r['goodput_tokens']:5d} tok  "
               f"outcomes={r['outcomes']}  lost={r['lost_requests']}  "
               f"crashes={r['crashes']} quarantined={r['quarantined']} "

@@ -25,20 +25,24 @@ throttle events than the per-region-greedy baseline.
 """
 import numpy as np
 
+from repro.configs import get_config
 from repro.core.datacenter import DCConfig
 from repro.core.fleet import (FleetConfig, FleetSim, GlobalTapasRouter,
                               LatencyOnlyRouter, RegionSpec)
 from repro.core.scenario import (DemandSurge, FailureEvent, Scenario,
                                  WeatherShift)
 from repro.core.simulator import TAPAS
+from repro.serving import EngineFleet, EngineSpec
 
 
-def make_fleet(fleet_policy, seed: int = 0) -> FleetSim:
-    """The drill: 3 regions, gulf loses cooling mid-heat-wave.  Also the
-    workload ``benchmarks/bench_fleet.py`` records and CI gates on."""
+def make_fleet(fleet_policy, seed: int = 0, *,
+               servers_per_rack: int = 4) -> FleetSim:
+    """The drill: 3 regions, gulf loses cooling mid-heat-wave.  At the
+    default size this is also the workload ``benchmarks/bench_fleet.py``
+    records and CI gates on; the measured drill below runs it bigger."""
     def dc(climate):
-        return DCConfig(n_rows=4, racks_per_row=4, servers_per_rack=4,
-                        region=climate)
+        return DCConfig(n_rows=4, racks_per_row=4,
+                        servers_per_rack=servers_per_rack, region=climate)
 
     regions = (
         RegionSpec("gulf", dc=dc("hot"), wan_rtt_ms=10.0, power_price_scale=1.2),
@@ -89,6 +93,71 @@ def run_drill(label: str, fleet_policy, *, verbose: bool) -> dict:
     return s
 
 
+def run_measured_drill(*, min_servers: int = 100) -> dict:
+    """The same 3-region drill on *measured* goodput: every SaaS server
+    that ever appears gets a real serving backend.
+
+    One ``EngineFleet`` per region (two engines each) backs the region's
+    whole SaaS tier through the batched pump — all six engines alias ONE
+    copy of the model weights (``EngineSpec.build(share=...)``), and each
+    tick every attached ``FleetBackend`` submits its server's routed
+    demand before a single ``flush`` per fleet steps the engines for all
+    of them together.  Attachment is progressive (servers churn), so the
+    drill ends with well past ``min_servers`` simulated servers having
+    run on engine-measured goodput instead of profile physics."""
+    spec = EngineSpec(get_config("llama2-7b").smoke_config(),
+                      max_seq=64, n_slots=4, block_size=8)
+    fs = make_fleet(GlobalTapasRouter, servers_per_rack=6)
+    fleets: dict[str, EngineFleet] = {}
+    share = None
+    for name in sorted(fs.sims):
+        fleets[name] = EngineFleet(
+            spec, n_engines=2, steps_per_tick=4, share=share,
+            backend_kw=dict(requests_per_load=1.0, prompt_len=4,
+                            max_new_tokens=2))
+        share = share or fleets[name].engines[0]
+    attached: dict[tuple, object] = {}
+    measured_ticks = 0
+    while fs.tick < fs.ticks:
+        st = fs.step()
+        for name, cs in st.regions.items():
+            for srv in np.flatnonzero(cs.kind == 2):
+                key = (name, int(srv))
+                if key not in attached:
+                    bk = fleets[name].make_backend()
+                    fs.attach_backend(name, int(srv), bk)
+                    attached[key] = bk
+        measured_ticks += sum(
+            1 for name, cs in st.regions.items()
+            if any(k[0] == name and cs.measured_goodput.get(k[1], 0.0) > 0
+                   for k in attached))
+    for fl in fleets.values():
+        fl.drain(now_h=12.0 + 1.0)
+
+    share_params = fleets[sorted(fleets)[0]].engines[0].variants["full"][1]
+    engines = [e for fl in fleets.values() for e in fl.engines]
+    served = sum(1 for bk in (b for fl in fleets.values()
+                              for b in fl.backends)
+                 if any(len(r.output) > 0 for r in bk.issued))
+    tokens = sum(len(r.output) for fl in fleets.values()
+                 for bk in fl.backends for r in bk.issued)
+    out = {
+        "attached": len(attached),
+        "engines": len(engines),
+        "one_weight_copy": all(e.variants["full"][1] is share_params
+                               for e in engines),
+        "served_servers": served,
+        "decode_tokens": tokens,
+        "flushes": {n: fl.flushes for n, fl in fleets.items()},
+        "measured_region_ticks": measured_ticks,
+    }
+    print(f"measured  attached={out['attached']} servers on "
+          f"{out['engines']} engines (one weight copy: "
+          f"{out['one_weight_copy']})  served={served} servers, "
+          f"{tokens} tokens  flushes={out['flushes']}")
+    return out
+
+
 def main() -> None:
     print("== per-region-greedy baseline (LatencyOnlyRouter) ==")
     base = run_drill("latency", LatencyOnlyRouter, verbose=False)
@@ -106,6 +175,19 @@ def main() -> None:
           f"{base['throttle_events']} -> {glob['throttle_events']} by "
           f"steering {glob['moved_load']:.0f} VM-ticks of load "
           f"(+{glob['migrations']} VM migrations) across regions")
+
+    print("\n== same drill on measured goodput (fleet of real engines) ==")
+    m = run_measured_drill()
+    assert m["attached"] >= 100, \
+        f"only {m['attached']} servers ever ran on a real backend"
+    assert m["one_weight_copy"], "engines did not share one params copy"
+    assert m["decode_tokens"] > 0 and m["served_servers"] >= 50
+    assert all(n > 0 for n in m["flushes"].values()), \
+        "a region's fleet was never flushed by the batched pump"
+    assert m["measured_region_ticks"] > 0, \
+        "no region ever reported engine-measured goodput"
+    print(f"{m['attached']} simulated servers served by "
+          f"{m['engines']} real engines through the batched pump")
 
 
 if __name__ == "__main__":

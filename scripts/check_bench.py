@@ -51,6 +51,13 @@ SPECS = {
         {"metric": "spec_speedup", "min": 1.5},
         {"metric": "spec.accepted_tokens_per_sync", "min": 10.0},
         {"metric": "spec.acceptance_rate", "min": 0.3},
+        # batched pump: one process (two real engines, one weight copy)
+        # backs >= 100 simulated SaaS servers, every server gets service,
+        # and equal load comes back as near-equal per-server tokens
+        {"metric": "fleet_pump.servers", "min": 100},
+        {"metric": "fleet_pump.all_servers_served", "eq": True},
+        {"metric": "fleet_pump.tokens_per_server_cov", "max": 0.25},
+        {"metric": "fleet_pump.decode_tok_per_s", "min": 1e-9},
     ],
     "fleet": [
         {"metric": "per_seed.0.global.throttle_events",

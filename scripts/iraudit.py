@@ -31,6 +31,12 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT / "src"))
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# mesh-geometry entries (min_devices > 1) trace under a (1, N) mesh; give
+# the CPU backend enough fake devices before jax is imported
+_flags = os.environ.get("XLA_FLAGS", "")
+if "host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_force_host_platform_device_count=4").strip()
 
 DEFAULT_BUDGETS = ROOT / "benchmarks" / "BUDGET_ir.json"
 
@@ -90,7 +96,14 @@ def main(argv=None) -> int:
             print(f"{e.name:26s} [{e.kind}]{don}{f32}  {e.doc}")
         return 0
 
-    names = [e.name for e in ENTRYPOINTS]
+    import jax
+    avail = jax.device_count()
+    names = [e.name for e in ENTRYPOINTS if e.min_devices <= avail]
+    skipped = [e.name for e in ENTRYPOINTS if e.min_devices > avail]
+    if skipped:
+        print(f"note: {len(skipped)} mesh entr{'y' if len(skipped) == 1 else 'ies'} "
+              f"skipped ({', '.join(skipped)}): need more than {avail} "
+              f"devices", file=sys.stderr)
     if args.entries:
         picked = [n for n in names
                   if any(fnmatch.fnmatch(n, p) for p in args.entries)]
@@ -113,9 +126,10 @@ def main(argv=None) -> int:
         rows[name] = cost_metrics(audit)
 
     if args.update_budgets:
-        if picked != names:
+        if picked != names or skipped:
             print("--update-budgets requires auditing the full registry "
-                  "(drop the entry filter)", file=sys.stderr)
+                  "(drop the entry filter; mesh entries need a multi-device "
+                  "view)", file=sys.stderr)
             return 2
         write_budgets(rows, ctx, args.budgets)
         print(f"budgets re-recorded for {len(rows)} entrypoints -> "
@@ -131,10 +145,19 @@ def main(argv=None) -> int:
                             f"(record it with --update-budgets)")
         else:
             if picked != names:
+                keep = set(picked)
                 pinned = {"meta": pinned.get("meta", {}),
                           "entries": {k: v
                                       for k, v in pinned["entries"].items()
-                                      if k in set(picked)}}
+                                      if k in keep}}
+            elif skipped:
+                # device-limited view: mesh rows pinned under a wider
+                # view are not stale, just unauditable here; anything
+                # else unknown still flags
+                pinned = {"meta": pinned.get("meta", {}),
+                          "entries": {k: v
+                                      for k, v in pinned["entries"].items()
+                                      if k not in set(skipped)}}
             problems = check_budgets(rows, pinned)
 
     print(_HEADER)

@@ -130,7 +130,11 @@ def _split_instruction(line: str) -> Instr | None:
             break
     operand_text = rest[pi + 1: end]
     attrs = rest[end + 1:]
-    operands = [o.strip().lstrip("%") for o in _split_top_commas(operand_text)]
+    # operands print as "%name" or typed "f32[3,4]{1,0} %name" (XLA uses the
+    # typed form in SPMD-partitioned modules); keep only the name so symtab
+    # lookups — and with them collective/operand byte counting — resolve
+    operands = [o.strip().rsplit(" ", 1)[-1].lstrip("%")
+                for o in _split_top_commas(operand_text)]
     rb, re_ = _shape_info(result_type)
     return Instr(name, opcode, result_type, [o for o in operands if o],
                  attrs, rb, re_)

@@ -32,11 +32,17 @@ def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
 
 
 class AuditContext:
-    """Smoke-scale serving geometry shared by every registered entrypoint."""
+    """Smoke-scale serving geometry shared by every registered entrypoint.
+
+    ``shards > 1`` audits the same geometry under a ``(1, shards)``
+    ("data", "model") mesh — the sharded paged pool + LSE-combined decode
+    paths — and needs that many visible devices (``scripts/iraudit.py``
+    forces a 4-device CPU view; entries carry ``min_devices`` so
+    single-device test sessions skip them)."""
 
     def __init__(self, config_name: str = "llama2-7b", *, n_lanes: int = 3,
                  max_seq: int = 64, block_size: int = 8, horizon: int = 4,
-                 chunk: int = 16, bucket: int = 16):
+                 chunk: int = 16, bucket: int = 16, shards: int = 1):
         self.config_name = config_name
         self.n_lanes = n_lanes
         self.max_seq = max_seq
@@ -44,11 +50,18 @@ class AuditContext:
         self.horizon = horizon
         self.chunk = chunk
         self.bucket = bucket
+        self.shards = shards
         self.blocks_per_seq = max_seq // block_size
         self.n_blocks = n_lanes * self.blocks_per_seq + 1   # + parking block
+        if self.n_blocks % max(shards, 1):
+            self.n_blocks += shards - self.n_blocks % shards
         self.cfg = get_config(config_name).smoke_config()
-        self.model = build_model(self.cfg,
-                                 local_plan(param_dtype=jnp.bfloat16))
+        if shards > 1:
+            from repro.serving.spec import serving_plan
+            plan = serving_plan(shards)
+        else:
+            plan = local_plan(param_dtype=jnp.bfloat16)
+        self.model = build_model(self.cfg, plan)
         self.params = jax.eval_shape(self.model.init, jax.random.PRNGKey(0))
         self.cache = jax.eval_shape(
             lambda: self.model.init_paged_cache(self.n_blocks,
@@ -107,6 +120,7 @@ class Entrypoint:
     f32_dot_ok: bool = False
     const_cap_bytes: int = 2048
     doc: str = ""
+    min_devices: int = 1         # mesh entries need this many visible devices
 
 
 @dataclass
@@ -184,10 +198,28 @@ def _b_paged_insert(ctx: AuditContext):
                            _sds((n,), jnp.int32), _sds((), jnp.int32)), {}
 
 
-def _b_dev_set_row(ctx: AuditContext):
-    from repro.serving.kvcache import _dev_set_row
-    return _dev_set_row, (ctx.tables(), _sds((), jnp.int32),
-                          _sds((ctx.blocks_per_seq,), jnp.int32)), {}
+def _b_mirror_row(ctx: AuditContext):
+    # the single donated mirror-update choke point, at row arity (the
+    # block-table adopt path): arr.at[(lane,)].set(row)
+    from repro.serving.kvcache import _mirror_update
+    return _mirror_update, (ctx.tables(), (_sds((), jnp.int32),),
+                            _sds((ctx.blocks_per_seq,), jnp.int32)), {}
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_ctx(shards: int) -> AuditContext:
+    """One cached mesh-geometry context per shard degree (construction
+    requires >= ``shards`` visible devices, so it is deferred to build
+    time and only reached when ``min_devices`` admits the entry)."""
+    return AuditContext(shards=shards)
+
+
+def _b_decode_step_mesh(_ctx, *, shards: int):
+    return _b_decode_step(_mesh_ctx(shards))
+
+
+def _b_prefill_chunk_mesh(_ctx, *, shards: int):
+    return _b_prefill_chunk(_mesh_ctx(shards))
 
 
 def _b_bad_lane_scan(ctx: AuditContext):
@@ -238,8 +270,9 @@ ENTRYPOINTS: tuple = (
                donate=(1,), doc="chunked paged prefill, chunk 16"),
     Entrypoint("pool_paged_insert", "pool", _b_paged_insert, donate=(0,),
                doc="scatter one prefilled request into its pool blocks"),
-    Entrypoint("pool_set_row", "pool", _b_dev_set_row, donate=(0,),
-               doc="device-mirror row update (block-table adopt path)"),
+    Entrypoint("pool_mirror_row", "pool", _b_mirror_row, donate=(0,),
+               doc="donated mirror-update choke point, row arity "
+                   "(block-table adopt path)"),
     Entrypoint("pool_bad_lane_scan", "pool", _b_bad_lane_scan,
                doc="NaN/Inf quarantine sweep over written KV positions"),
     Entrypoint("kernel_paged_decode", "kernel", _b_kernel_decode,
@@ -248,6 +281,19 @@ ENTRYPOINTS: tuple = (
     Entrypoint("kernel_paged_prefill", "kernel", _b_kernel_prefill,
                f32_dot_ok=True,
                doc="Pallas paged prefill kernel (interpret mode)"),
+    # mesh geometries: the same decode/prefill hot paths under a
+    # (data=1, model=2) mesh — per-shard paged attention + LSE combine,
+    # with coll_bytes as a live budget column (the name carries the mesh
+    # shape so budget rows per geometry stay distinct)
+    Entrypoint("decode_step_paged@1x2", "model",
+               functools.partial(_b_decode_step_mesh, shards=2),
+               donate=(1,), min_devices=2,
+               doc="paged decode under a 1x2 mesh (sharded pool, "
+                   "LSE-combined)"),
+    Entrypoint("prefill_chunk_paged_c16@1x2", "model",
+               functools.partial(_b_prefill_chunk_mesh, shards=2),
+               donate=(1,), min_devices=2,
+               doc="chunked paged prefill under a 1x2 mesh"),
 )
 
 ENTRYPOINTS_BY_NAME = {e.name: e for e in ENTRYPOINTS}

@@ -207,6 +207,9 @@ class DegradationLadder:
         self.min_batch = min_batch
         self.level = 0            # rungs currently applied
         self.walks = 0            # total step-downs over the run
+        self.skipped_rungs = 0    # quantized swaps refused by the engine
+        #                           (variant indivisible at the current
+        #                           shard degree — reject, don't crash)
         self._calm = 0
         self._saved: dict[str, object] = {}
 
@@ -242,6 +245,12 @@ class DegradationLadder:
             self._saved["horizon"] = eng.horizon
             eng.horizon = max(self.min_horizon, eng.horizon // 2)
         elif rung == "quantized_variant":
+            ok = getattr(eng, "variant_compatible", None)
+            if ok is not None and not ok(self.quantized_variant):
+                # the variant's head count does not divide the engine's
+                # shard degree: skip the rung, keep walking the ladder
+                self.skipped_rungs += 1
+                return
             self._saved["variant"] = eng.knobs.variant
             if eng.knobs.variant != self.quantized_variant:
                 eng.set_variant(self.quantized_variant)

@@ -716,6 +716,17 @@ class ClusterSim:
             load = (float(state.saas_load[srv])
                     if state.kind[srv] == 2 else 0.0)
             backend.pump(now=state.now_h, load=load)
+        # batched pump: fleet-attached backends only *submitted* demand
+        # above; run each distinct fleet's engines once for all of its
+        # servers, then read everyone's settled rate
+        fleets: list = []
+        for backend in self.backends.values():
+            fl = getattr(backend, "fleet", None)
+            if fl is not None and all(fl is not f for f in fleets):
+                fleets.append(fl)
+        for fl in fleets:
+            fl.flush(now=state.now_h)
+        for srv, backend in self.backends.items():
             state.measured_goodput[srv] = backend.measured_goodput()
 
     def _watchdog_tick(self, state: ClusterState) -> None:

@@ -17,7 +17,10 @@ from repro.kernels.int8_matmul import (int8_matmul as _int8_mm,
 from repro.kernels.paged_decode_attention import \
     paged_decode_attention as _paged_decode
 from repro.kernels.paged_decode_attention import \
+    paged_decode_attention_lse as _paged_decode_lse
+from repro.kernels.paged_decode_attention import \
     paged_prefill_attention as _paged_prefill
+from repro.kernels.paged_decode_attention import combine_lse
 from repro.kernels.paged_decode_attention import \
     paged_verify_attention as _paged_verify
 from repro.kernels.rwkv6_wkv import rwkv6_wkv as _wkv
@@ -51,6 +54,17 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, positions, *,
         interpret = _default_interpret()
     return _paged_decode(q, k_pool, v_pool, block_tables, positions,
                          interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_lse(q, k_pool, v_pool, block_tables, positions,
+                               owned, *, interpret=None):
+    """Per-KV-shard paged decode: (o, lse) over the owned blocks only;
+    merge shards with ``combine_lse``."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _paged_decode_lse(q, k_pool, v_pool, block_tables, positions,
+                             owned, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -97,6 +111,7 @@ def int8_matmul(x_q, w_q, sx, sw, *, interpret=None):
 
 
 __all__ = ["flash_attention", "decode_attention", "paged_decode_attention",
+           "paged_decode_attention_lse", "combine_lse",
            "paged_prefill_attention", "paged_verify_attention", "rwkv6_wkv",
            "int8_matmul", "int8_matmul_quantized", "quantize_rows",
            "quantize_cols"]

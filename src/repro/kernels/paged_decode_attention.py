@@ -130,6 +130,128 @@ def _paged_prefill_kernel(bt_ref, st_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = o.astype(o_ref.dtype)
 
 
+def _paged_decode_lse_kernel(bt_ref, pos_ref, own_ref, q_ref, k_ref, v_ref,
+                             o_ref, lse_ref, m_sc, l_sc, acc_sc, *,
+                             scale: float, block_size: int, groups: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)          # logical block index within the sequence
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    pos = pos_ref[b]
+    k_lo = j * block_size
+
+    @pl.when((k_lo <= pos) & (own_ref[b, j] != 0))
+    def _body():
+        q = q_ref[0].astype(jnp.float32)      # (H, D), H = K*G
+        k = k_ref[...].astype(jnp.float32)    # (bs, K, D) — physical block
+        v = v_ref[...].astype(jnp.float32)
+        K = k.shape[1]
+        qg = q.reshape(K, groups, q.shape[-1])
+        s = jax.lax.dot_general(qg, k, (((2,), (2,)), ((0,), (1,))),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        s = jnp.where(kpos <= pos, s, NEG_INF)
+        sh = s.reshape(K * groups, block_size)  # (H, bs)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sh, axis=1))
+        p = jnp.exp(sh - m_new[:, None]).reshape(K, groups, block_size)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=2).reshape(-1)
+        o = jax.lax.dot_general(p, v, (((2,), (0,)), ((0,), (1,))),
+                                preferred_element_type=jnp.float32)
+        acc_sc[...] = acc_sc[...] * corr[:, None] + o.reshape(K * groups, -1)
+        m_sc[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        l = l_sc[...]
+        o_ref[0] = (acc_sc[...]
+                    / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+        lse_ref[0] = jnp.where(l > 0.0, m_sc[...] + jnp.log(
+            jnp.maximum(l, 1e-30)), NEG_INF)
+
+
+def paged_decode_attention_lse(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, block_tables: jax.Array,
+                               positions: jax.Array, owned: jax.Array, *,
+                               scale: float | None = None,
+                               interpret: bool = False):
+    """Paged decode attention over a *partial* pool, with the LSE exposed.
+
+    The per-KV-shard building block of the block-stripe sharded pool
+    (``models/attention._paged_decode_core``): each shard runs this over
+    its local stripe and the shards' outputs merge exactly via
+    ``combine_lse`` — the same max/sum softmax merge ``_flash_decode_core``
+    does with pmax/psum.
+
+    ``owned``: (B, T) nonzero where this shard holds the table's block;
+    unowned slots are skipped entirely (never DMA'd), so callers may clip
+    their localized table ids into range without masking the contents.
+    Returns ``(o, lse)``: o (B, H, D) softmax-normalised over the owned
+    blocks only, lse (B, H) float32 ``m + log(l)`` (``NEG_INF`` where the
+    shard saw no key), so the combine is exact in one weighted sum.
+    """
+    B, H, D = q.shape
+    bs, K = k_pool.shape[1], k_pool.shape[2]
+    T = block_tables.shape[1]
+    assert H % K == 0
+    groups = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    kern = functools.partial(_paged_decode_lse_kernel, scale=scale,
+                             block_size=bs, groups=groups)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,    # block_tables, positions, owned in SMEM
+        grid=(B, T),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, j, bt, pos, own: (b, 0, 0)),
+            pl.BlockSpec((None, bs, K, D),
+                         lambda b, j, bt, pos, own: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((None, bs, K, D),
+                         lambda b, j, bt, pos, own: (bt[b, j], 0, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, H, D), lambda b, j, bt, pos, own: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b, j, bt, pos, own: (b, 0)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct(q.shape, q.dtype),
+                   jax.ShapeDtypeStruct((B, H), jnp.float32)),
+        compiler_params=tpu_compiler_params(("parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), positions.astype(jnp.int32),
+      owned.astype(jnp.int32), q, k_pool, v_pool)
+
+
+def combine_lse(os: jax.Array, lses: jax.Array) -> jax.Array:
+    """Merge per-shard ``paged_decode_attention_lse`` outputs exactly.
+
+    os: (S, B, H, D) per-shard normalised outputs; lses: (S, B, H).
+    Weights each shard by ``exp(lse_s - max_s lse)`` times its own
+    denominator share — algebraically identical to one softmax over the
+    union of the shards' keys.
+    """
+    m = jnp.max(lses, axis=0)                       # (B, H)
+    w = jnp.exp(lses - m[None])                     # (S, B, H)
+    denom = jnp.maximum(jnp.sum(w, axis=0), 1e-30)  # (B, H)
+    o = jnp.sum(os.astype(jnp.float32) * w[..., None], axis=0) / denom[..., None]
+    return o.astype(os.dtype)
+
+
 def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
                             v_pool: jax.Array, block_tables: jax.Array,
                             starts: jax.Array, *,

@@ -621,6 +621,110 @@ def paged_prefill_attention(q, k_pool, v_pool, block_tables, starts, *,
     return o.astype(q.dtype)
 
 
+def _paged_decode_core(axis, q, k_pool, v_pool, block_tables, positions,
+                       k_new, v_new, *, scale, kv_idx):
+    """Per-shard paged decode on a block-stripe of the pool, LSE-combined.
+
+    Rank r owns physical blocks ``[r*nb_loc, (r+1)*nb_loc)``: the new
+    token's KV scatter uses an out-of-range sentinel with ``mode="drop"``
+    so exactly the owning rank writes, the gather masks unowned table
+    entries, and the softmax merges across ranks via the same
+    max/sum-reduce (pmax/psum) idiom as ``_flash_decode_core``.
+
+    q: (B, H, hd); k_pool/v_pool: (nb_loc, bs, K, hd) local stripe;
+    block_tables: (B, T) *global* block ids; k_new/v_new: (B, K, hd).
+    """
+    B, H = q.shape[:2]
+    nb_loc, bs, K = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    off = (jax.lax.axis_index(axis) * nb_loc) if axis is not None else 0
+    blk = jnp.take_along_axis(block_tables, (positions // bs)[:, None],
+                              axis=1)[:, 0]
+    o_in_b = positions % bs
+    local_b = blk - off
+    owned = (local_b >= 0) & (local_b < nb_loc)
+    safe_b = jnp.where(owned, local_b, nb_loc)     # OOB on unowned -> dropped
+    k_pool = k_pool.at[safe_b, o_in_b].set(k_new.astype(k_pool.dtype),
+                                           mode="drop")
+    v_pool = v_pool.at[safe_b, o_in_b].set(v_new.astype(v_pool.dtype),
+                                           mode="drop")
+    T = block_tables.shape[1]
+    local_t = block_tables - off
+    t_owned = (local_t >= 0) & (local_t < nb_loc)  # (B, T)
+    safe_t = jnp.clip(local_t, 0, nb_loc - 1)
+    k = k_pool[safe_t].reshape(B, T * bs, K, -1)
+    v = v_pool[safe_t].reshape(B, T * bs, K, -1)
+    ke = _expand_kv(k, kv_idx, H)
+    ve = _expand_kv(v, kv_idx, H)
+    s = jnp.einsum("bhd,bshd->bhs", q, ke,
+                   preferred_element_type=jnp.float32) * scale
+    mask = (jnp.arange(T * bs)[None, None, :] <= positions[:, None, None]) \
+        & jnp.repeat(t_owned, bs, axis=1)[:, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    if axis is not None:
+        m = jax.lax.pmax(m, axis)
+    pexp = jnp.exp(s - m[..., None])
+    l = jnp.sum(pexp, axis=-1)
+    num = jnp.einsum("bhs,bshd->bhd", pexp.astype(ve.dtype), ve,
+                     preferred_element_type=jnp.float32)
+    if axis is not None:
+        l = jax.lax.psum(l, axis)
+        num = jax.lax.psum(num, axis)
+    o = num / jnp.maximum(l, 1e-30)[..., None]
+    return o.astype(q.dtype), k_pool, v_pool
+
+
+def _paged_prefill_core(axis, q, k_pool, v_pool, block_tables, starts,
+                        lengths, k, v, *, scale, kv_idx):
+    """Per-shard chunk prefill on a block-stripe of the pool, LSE-combined.
+
+    q: (B, C, H, hd); k/v: (B, C, K, hd) the chunk's new KV (rope applied,
+    real heads); the scatter-then-gather ordering inside the core keeps
+    within-chunk causal attention exact on the rank that owns each block.
+    """
+    B, C, H = q.shape[:3]
+    nb_loc, bs, K = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    off = (jax.lax.axis_index(axis) * nb_loc) if axis is not None else 0
+    positions = starts[:, None] + jnp.arange(C)[None, :]
+    valid = jnp.arange(C)[None, :] < lengths[:, None]
+    safe_pos = jnp.where(valid, positions, 0)
+    blk = jnp.take_along_axis(block_tables, safe_pos // bs, axis=1)
+    blk = jnp.where(valid, blk, 0)
+    o_in_b = jnp.where(valid, safe_pos % bs, 0)
+    local_b = blk - off
+    owned_w = valid & (local_b >= 0) & (local_b < nb_loc)
+    safe_b = jnp.where(owned_w, local_b, nb_loc)   # OOB on unowned -> dropped
+    k_pool = k_pool.at[safe_b.reshape(-1), o_in_b.reshape(-1)].set(
+        k.reshape(B * C, K, -1).astype(k_pool.dtype), mode="drop")
+    v_pool = v_pool.at[safe_b.reshape(-1), o_in_b.reshape(-1)].set(
+        v.reshape(B * C, K, -1).astype(v_pool.dtype), mode="drop")
+    T = block_tables.shape[1]
+    local_t = block_tables - off
+    t_owned = (local_t >= 0) & (local_t < nb_loc)
+    safe_t = jnp.clip(local_t, 0, nb_loc - 1)
+    kk = k_pool[safe_t].reshape(B, T * bs, K, -1)
+    vv = v_pool[safe_t].reshape(B, T * bs, K, -1)
+    ke = _expand_kv(kk, kv_idx, H)
+    ve = _expand_kv(vv, kv_idx, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, ke,
+                   preferred_element_type=jnp.float32) * scale
+    kmask = (jnp.arange(T * bs)[None, None, :] <= positions[:, :, None]) \
+        & jnp.repeat(t_owned, bs, axis=1)[:, None, :]
+    s = jnp.where(kmask[:, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                        # (B, H, C)
+    if axis is not None:
+        m = jax.lax.pmax(m, axis)
+    pexp = jnp.exp(s - m[..., None])
+    l = jnp.sum(pexp, axis=-1)
+    num = jnp.einsum("bhqk,bkhd->bqhd", pexp.astype(ve.dtype), ve,
+                     preferred_element_type=jnp.float32)
+    if axis is not None:
+        l = jax.lax.psum(l, axis)
+        num = jax.lax.psum(num, axis)
+    o = num / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return o.astype(q.dtype), k_pool, v_pool
+
+
 def gqa_prefill_paged(p: Params, x: jax.Array, cache: Params,
                       starts: jax.Array, lengths: jax.Array,
                       block_tables: jax.Array, cfg: ArchConfig,
@@ -648,21 +752,35 @@ def gqa_prefill_paged(p: Params, x: jax.Array, cache: Params,
     if plan.kv_padded(cfg):
         copies = plan.k_pad(cfg) // cfg.n_kv_heads
         k, v = k[:, :, ::copies], v[:, :, ::copies]
-    bs = cache["k"].shape[1]
-    K = cache["k"].shape[2]
-    valid = jnp.arange(C)[None, :] < lengths[:, None]
-    safe_pos = jnp.where(valid, positions, 0)
-    blk = jnp.take_along_axis(block_tables, safe_pos // bs, axis=1)
-    blk = jnp.where(valid, blk, 0)
-    off = jnp.where(valid, safe_pos % bs, 0)
-    k_c = cache["k"].at[blk.reshape(-1), off.reshape(-1)].set(
-        k.reshape(B * C, K, -1).astype(cache["k"].dtype))
-    v_c = cache["v"].at[blk.reshape(-1), off.reshape(-1)].set(
-        v.reshape(B * C, K, -1).astype(cache["v"].dtype))
     idx = kv_index(cfg, h_pad)
     scale = 1.0 / math.sqrt(cfg.head_dim)
-    o = paged_prefill_attention(q, k_c, v_c, block_tables, starts,
-                                scale=scale, kv_idx=idx)
+    if plan.paged_pool_sharded(cfg):
+        dp = plan.dp_axes if plan.dp_axes else None
+        tp = plan.tp_axis
+        in_specs = (P(dp, None, None, None), P(tp, None, None, None),
+                    P(tp, None, None, None), P(dp, None), P(dp), P(dp),
+                    P(dp, None, None, None), P(dp, None, None, None))
+        out_specs = (P(dp, None, None, None), P(tp, None, None, None),
+                     P(tp, None, None, None))
+        o, k_c, v_c = shard_map_or_call(
+            plan,
+            lambda ax, *a: _paged_prefill_core(ax, *a, scale=scale, kv_idx=idx),
+            in_specs, out_specs, q, cache["k"], cache["v"], block_tables,
+            starts, lengths, k, v)
+    else:
+        bs = cache["k"].shape[1]
+        K = cache["k"].shape[2]
+        valid = jnp.arange(C)[None, :] < lengths[:, None]
+        safe_pos = jnp.where(valid, positions, 0)
+        blk = jnp.take_along_axis(block_tables, safe_pos // bs, axis=1)
+        blk = jnp.where(valid, blk, 0)
+        off = jnp.where(valid, safe_pos % bs, 0)
+        k_c = cache["k"].at[blk.reshape(-1), off.reshape(-1)].set(
+            k.reshape(B * C, K, -1).astype(cache["k"].dtype))
+        v_c = cache["v"].at[blk.reshape(-1), off.reshape(-1)].set(
+            v.reshape(B * C, K, -1).astype(cache["v"].dtype))
+        o = paged_prefill_attention(q, k_c, v_c, block_tables, starts,
+                                    scale=scale, kv_idx=idx)
     out = jnp.einsum("bshk,hkd->bsd", o, p["w_o"].astype(dt))
     return plan.constrain(out, ("batch", "seq", "embed_act"), cfg), \
         {"k": k_c, "v": v_c}
@@ -681,16 +799,30 @@ def gqa_decode_paged(p: Params, x: jax.Array, cache: Params,
     dt = plan.compute_dtype
     h_pad = plan.h_pad(cfg)
     q, k_new, v_new = _decode_qkv(p, x, positions, cfg, plan)
-    bs = cache["k"].shape[1]
-    blk = jnp.take_along_axis(block_tables, (positions // bs)[:, None],
-                              axis=1)[:, 0]
-    off = positions % bs
-    k_c = cache["k"].at[blk, off].set(k_new.astype(cache["k"].dtype))
-    v_c = cache["v"].at[blk, off].set(v_new.astype(cache["v"].dtype))
     idx = kv_index(cfg, h_pad)
     scale = 1.0 / math.sqrt(cfg.head_dim)
-    o = paged_attention(q, k_c, v_c, block_tables, positions,
-                        scale=scale, kv_idx=idx)
+    if plan.paged_pool_sharded(cfg):
+        dp = plan.dp_axes if plan.dp_axes else None
+        tp = plan.tp_axis
+        in_specs = (P(dp, None, None), P(tp, None, None, None),
+                    P(tp, None, None, None), P(dp, None), P(dp),
+                    P(dp, None, None), P(dp, None, None))
+        out_specs = (P(dp, None, None), P(tp, None, None, None),
+                     P(tp, None, None, None))
+        o, k_c, v_c = shard_map_or_call(
+            plan,
+            lambda ax, *a: _paged_decode_core(ax, *a, scale=scale, kv_idx=idx),
+            in_specs, out_specs, q, cache["k"], cache["v"], block_tables,
+            positions, k_new, v_new)
+    else:
+        bs = cache["k"].shape[1]
+        blk = jnp.take_along_axis(block_tables, (positions // bs)[:, None],
+                                  axis=1)[:, 0]
+        off = positions % bs
+        k_c = cache["k"].at[blk, off].set(k_new.astype(cache["k"].dtype))
+        v_c = cache["v"].at[blk, off].set(v_new.astype(cache["v"].dtype))
+        o = paged_attention(q, k_c, v_c, block_tables, positions,
+                            scale=scale, kv_idx=idx)
     out = jnp.einsum("bhk,hkd->bd", o, p["w_o"].astype(dt))
     return plan.constrain(out, ("batch", "embed_act"), cfg), {"k": k_c, "v": v_c}
 
@@ -774,8 +906,11 @@ def init_paged_attn_cache(cfg: ArchConfig, plan: ShardPlan, n_blocks: int,
         "v": jnp.zeros((n_blocks, block_size, cfg.n_kv_heads, cfg.head_dim),
                        dtype),
     }
-    ax = {"k": (None, None, "kv_cache_heads", None),
-          "v": (None, None, "kv_cache_heads", None)}
+    if plan.paged_pool_sharded(cfg) and n_blocks % plan.tp:
+        raise ValueError(f"paged pool of {n_blocks} blocks does not divide "
+                         f"the {plan.tp}-way model axis; round n_blocks up")
+    ax = {"k": ("kv_blocks", None, "kv_cache_heads", None),
+          "v": ("kv_blocks", None, "kv_cache_heads", None)}
     return c, ax
 
 

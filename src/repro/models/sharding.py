@@ -22,6 +22,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.models.layers import pad_to_multiple
 
+if hasattr(jax, "shard_map"):                       # jax >= 0.5
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+else:                                               # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_KW = {"check_rep": False}
+
 
 @dataclass(frozen=True)
 class ShardPlan:
@@ -42,6 +49,8 @@ class ShardPlan:
     attn_exact_causal: bool = False      # pair-scan: skip above-diagonal tiles
     #                                      (exact causal FLOPs + reads)
     attn_cq: int = 512                   # attention tile size (q and k)
+    shard_paged_pool: bool = True        # shard the paged KV block pool over
+    #                                      the model axis (LSE-combined decode)
 
     @property
     def tp(self) -> int:
@@ -77,6 +86,17 @@ class ShardPlan:
         return cfg.n_kv_heads > 0 and (cfg.n_kv_heads % self.tp == 0
                                        or self.kv_padded(cfg))
 
+    def paged_pool_sharded(self, cfg: ArchConfig | None = None) -> bool:
+        """Shard the paged block pool's ``n_blocks`` axis over ``model``?
+
+        The pool shards by *blocks* (rank r owns a contiguous stripe of
+        physical block ids), not by heads, so it holds for any kv-head
+        count — the per-shard attention masks unowned blocks and an LSE
+        max/sum combine merges the partials (see
+        ``attention._paged_decode_core``)."""
+        return (self.shard_paged_pool and self.mesh is not None
+                and self.tp_axis is not None and self.tp > 1)
+
     def e_pad(self, cfg: ArchConfig) -> int:
         return pad_to_multiple(cfg.n_experts, self.tp) if cfg.n_experts else 0
 
@@ -97,6 +117,8 @@ class ShardPlan:
             "kv_heads": tp if self.kv_sharded(cfg) else None,
             # decode caches shard along cache_seq; their head dim stays whole
             "kv_cache_heads": None,
+            # paged pools shard along physical block ids (stripe per rank)
+            "kv_blocks": tp if self.paged_pool_sharded() else None,
             "experts": tp,
             "d_inner": tp,
             "cache_seq": tp,             # decode KV cache sharded along sequence
@@ -151,7 +173,7 @@ def shard_map_or_call(plan: ShardPlan, fn, in_specs, out_specs, *args):
     """
     if plan.mesh is None or plan.tp_axis is None:
         return fn(None, *args)
-    mapped = jax.shard_map(
+    mapped = _shard_map(
         partial(fn, plan.tp_axis), mesh=plan.mesh,
-        in_specs=in_specs, out_specs=out_specs, check_vma=False)
+        in_specs=in_specs, out_specs=out_specs, **_SHARD_MAP_KW)
     return mapped(*args)

@@ -1018,12 +1018,30 @@ class Model:
 
     def init_paged_cache(self, n_blocks: int, block_size: int,
                          dtype=jnp.bfloat16):
-        """Layer-stacked paged KV pool: leaves (L, n_blocks, bs, K, hd)."""
+        """Layer-stacked paged KV pool: leaves (L, n_blocks, bs, K, hd).
+        Under a sharded plan each leaf is laid out over the mesh (the
+        ``kv_blocks`` axis stripes physical block ids across ranks)."""
         cfg, plan = self.cfg, self.plan
         c, _ = A.init_paged_attn_cache(cfg, plan, n_blocks, block_size, dtype)
-        return jax.tree.map(
+        cache = jax.tree.map(
             lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype),
             {"attn": c})
+        sh = self.paged_cache_shardings()
+        if sh is not None:
+            cache = jax.device_put(cache, sh)
+        return cache
+
+    def paged_cache_axes(self):
+        """Logical axes of the layer-stacked paged pool leaves."""
+        _, ax = A.init_paged_attn_cache(self.cfg, self.plan,
+                                        max(self.plan.tp, 1), 1, jnp.bfloat16)
+        return jax.tree.map(lambda a: ("layers",) + a, {"attn": ax},
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    def paged_cache_shardings(self):
+        if self.plan.mesh is None:
+            return None
+        return self.plan.tree_shardings(self.paged_cache_axes(), self.cfg)
 
     def cache_axes(self):
         _, ax = self._cache_template(1, 8, jnp.bfloat16)

@@ -1,7 +1,10 @@
-from repro.serving.backend import EngineBackend
-from repro.serving.engine import Engine, EngineKnobs, EngineStats
+from repro.serving.backend import EngineBackend, EngineFleet, FleetBackend
+from repro.serving.engine import Engine, EngineKnobs, EngineStats, \
+    shard_compat
 from repro.serving.kvcache import CachePool, PagedCachePool
 from repro.serving.request import Request
+from repro.serving.spec import EngineSpec, serving_plan
 
-__all__ = ["Engine", "EngineBackend", "EngineKnobs", "EngineStats",
-           "CachePool", "PagedCachePool", "Request"]
+__all__ = ["Engine", "EngineBackend", "EngineFleet", "EngineKnobs",
+           "EngineSpec", "EngineStats", "FleetBackend", "CachePool",
+           "PagedCachePool", "Request", "serving_plan", "shard_compat"]

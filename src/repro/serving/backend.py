@@ -48,6 +48,10 @@ class EngineBackend:
     (default: 1 -> 1, 16 -> half the lanes, 64 -> all lanes).
     """
 
+    #: set on FleetBackend instances; the simulator flushes each distinct
+    #: fleet once per tick after every attached backend has pumped
+    fleet = None
+
     def __init__(self, engine: Engine, *,
                  variant_for_size: dict | None = None,
                  batch_for_knob: dict | None = None,
@@ -56,7 +60,8 @@ class EngineBackend:
                  prompt_len: int = 6, max_new_tokens: int = 4,
                  seed: int = 0, draft_min_freq: float | None = None,
                  ladder=None, deadline_ms: float | None = None,
-                 max_retries: int = 3):
+                 max_retries: int = 3,
+                 shards_for_tp: dict | None = None):
         n = engine.n_slots
         self.engine = engine
         self.variant_for_size = variant_for_size or {}
@@ -69,6 +74,12 @@ class EngineBackend:
                 f"here would silently disable model swaps")
         self.batch_for_knob = batch_for_knob or {1: 1, 16: max(1, n // 2),
                                                  64: n}
+        # parallelism as a reconfigure axis: map the profile's tp degree
+        # onto engine shard counts (``Engine.set_shards``); unmapped tp
+        # values leave the shard degree untouched, and a mapping the
+        # engine rejects (``can_shard``) is counted, not crashed on
+        self.shards_for_tp = shards_for_tp or {}
+        self.shard_rejects = 0
         self.requests_per_load = requests_per_load
         self.steps_per_tick = steps_per_tick
         self.prompt_len = prompt_len
@@ -109,6 +120,12 @@ class EngineBackend:
         variant = self.variant_for_size.get(cfg.size)
         if variant is not None and variant != knobs.variant:
             self.engine.set_variant(variant)
+        shards = self.shards_for_tp.get(cfg.tp)
+        if shards is not None and shards != self.engine.shards:
+            if self.engine.can_shard(shards) is None:
+                self.engine.set_shards(shards)
+            else:
+                self.shard_rejects += 1
         if self.draft_min_freq is not None:
             if cfg.freq < self.draft_min_freq:
                 if self.engine.draft_name is not None:
@@ -248,4 +265,136 @@ class EngineBackend:
                 break
             produced += eng.step(now=now_s)
             now_s += 1.0
+        return produced
+
+
+# ---------------------------------------------------------------------------
+# fleet of engines: many simulated servers, few real engines
+# ---------------------------------------------------------------------------
+
+class EngineFleet:
+    """A small pool of real engines backing 100+ simulated SaaS servers.
+
+    All engines are built from ONE ``EngineSpec`` and share one copy of
+    the model params (``EngineSpec.build(share=first)`` aliases the
+    immutable jax arrays), so the weight footprint is per *fleet*, not
+    per simulated server.  Simulated servers attach via
+    ``make_backend()``, which round-robins them across the engines.
+
+    The pump is batched: each simulator tick every ``FleetBackend`` only
+    *submits* its server's demand (``pump``), and one ``flush()`` per
+    fleet then runs each engine's scheduler steps once for all of its
+    servers together — one process backs a whole region's SaaS tier on
+    measured goodput instead of stepping one engine per server.
+    """
+
+    def __init__(self, spec, *, n_engines: int = 2, steps_per_tick: int = 4,
+                 backend_kw: dict | None = None, share=None):
+        if n_engines < 1:
+            raise ValueError(f"n_engines must be >= 1, got {n_engines}")
+        self.spec = spec
+        first = spec.build(share=share) if share is not None else spec.build()
+        self.engines = [first] + [spec.build(share=first)
+                                  for _ in range(n_engines - 1)]
+        self.steps_per_tick = steps_per_tick
+        self.backend_kw = dict(backend_kw or {})
+        self.backends: list[FleetBackend] = []
+        self.flushes = 0
+
+    def make_backend(self, **kw) -> "FleetBackend":
+        """A backend for one more simulated server, assigned round-robin
+        to the fleet's engines."""
+        i = len(self.backends)
+        merged = {**self.backend_kw, **kw}
+        merged.setdefault("seed", i)
+        bk = FleetBackend(self.engines[i % len(self.engines)],
+                          fleet=self, index=i, **merged)
+        self.backends.append(bk)
+        return bk
+
+    def flush(self, *, now: float) -> int:
+        """Run each engine's scheduler steps for this tick and settle the
+        per-server measured rates.  The simulator calls this once per
+        distinct fleet after every attached backend pumped."""
+        self.flushes += 1
+        now_s = now * 3600.0
+        produced_total = 0
+        for eng in self.engines:
+            wall_before = eng.stats.step_time_total
+            produced = 0
+            for _ in range(self.steps_per_tick):
+                if eng.offline:
+                    break   # crashed: nothing steps until restore()
+                if eng.knobs.paused and not eng.active:
+                    break   # drained during a reload pause
+                produced += eng.step(now=now_s)
+            wall = eng.stats.step_time_total - wall_before
+            produced_total += produced
+            for bk in self.backends:
+                if bk.engine is eng:
+                    bk._settle(wall)
+        return produced_total
+
+    def drain(self, *, now_h: float, max_steps: int = 200) -> int:
+        """Run every engine dry after the last tick (one backend per
+        engine drives the shared drain)."""
+        produced = 0
+        seen = set()
+        for bk in self.backends:
+            if id(bk.engine) not in seen:
+                seen.add(id(bk.engine))
+                produced += EngineBackend.drain(bk, now_h=now_h,
+                                                max_steps=max_steps)
+        return produced
+
+
+class FleetBackend(EngineBackend):
+    """An ``EngineBackend`` whose engine is shared with other simulated
+    servers through an ``EngineFleet``.
+
+    ``pump`` only submits this server's demand (requests tagged with the
+    server's fleet index); the engine steps run once per tick for all
+    servers in ``EngineFleet.flush``, which settles each server's
+    measured goodput from its own requests' output-token delta over the
+    engine's step wall-clock."""
+
+    def __init__(self, engine: Engine, *, fleet: EngineFleet, index: int,
+                 **kw):
+        super().__init__(engine, **kw)
+        self.fleet = fleet
+        self.index = index
+        self._out_cursor = 0      # output tokens already credited
+
+    def pump(self, *, now: float, load: float) -> int:
+        now_s = now * 3600.0
+        vocab = self.engine.model.cfg.vocab_size
+        for _ in range(int(round(load * self.requests_per_load))):
+            # fresh construction, not a copy of an existing Request — the
+            # backend attrs just share the field names
+            req = Request(  # tapaslint: disable=TL004
+                prompt=[int(t) for t in self.rng.integers(
+                    0, vocab, self.prompt_len)],
+                max_new_tokens=self.max_new_tokens,
+                customer=f"srv{self.index}", arrival_s=now_s,
+                deadline_ms=self.deadline_ms,
+                max_retries=self.max_retries)
+            self.issued.append(req)
+            self.engine.submit(req)
+            self._next_id += 1
+        return 0    # tokens are produced (and counted) at flush time
+
+    def _settle(self, wall: float) -> None:
+        """Credit this tick's output-token delta against the engine's
+        step wall-clock for the tick (shared across the engine's
+        servers)."""
+        total = sum(len(r.output) for r in self.issued)
+        produced = total - self._out_cursor
+        self._out_cursor = total
+        self._last_rate = produced / wall if wall > 0.0 else 0.0
+
+    def drain(self, *, now_h: float, max_steps: int = 200) -> int:
+        produced = super().drain(now_h=now_h, max_steps=max_steps)
+        # fold the drained tokens into this server's cursor so a later
+        # audit of `issued` matches what was credited
+        self._out_cursor = sum(len(r.output) for r in self.issued)
         return produced

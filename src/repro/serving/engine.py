@@ -77,6 +77,7 @@ class EngineStats:
     preemptions: int = 0         # requests requeued for recompute (pool ran
     #                              dry, or displaced by a variant reload)
     variant_swaps: int = 0       # set_variant reloads (may preempt actives)
+    shard_swaps: int = 0         # set_shards reconfigures (preempt actives)
     rejected: int = 0            # finished "rejected": contexts that can
     #                              never fit max_seq, or retry-exhausted
     host_syncs: int = 0          # device->host readbacks on the serving path
@@ -144,6 +145,31 @@ class EngineStats:
     def acceptance_rate(self) -> float:
         """Fraction of proposed draft tokens the target accepted."""
         return self.accepted_tokens / max(self.draft_tokens, 1)
+
+
+def shard_compat(shards: int, cfg) -> str | None:
+    """Why ``cfg`` cannot serve at ``shards``-way model parallelism, or
+    None when it can.
+
+    Sharded serving requires *identity pads* — head / kv-head / vocab /
+    ffn counts that divide the shard degree — so params transfer verbatim
+    between plans on ``set_shards`` and the KV pool stays at the real
+    head count on every rank."""
+    if shards <= 1:
+        return None
+    if cfg.n_kv_heads and cfg.n_kv_heads % shards:
+        return (f"{cfg.name}: n_kv_heads={cfg.n_kv_heads} is not divisible "
+                f"by shard degree {shards}")
+    if cfg.n_heads % shards:
+        return (f"{cfg.name}: n_heads={cfg.n_heads} is not divisible by "
+                f"shard degree {shards}")
+    if cfg.vocab_size % shards:
+        return (f"{cfg.name}: vocab_size={cfg.vocab_size} is not divisible "
+                f"by shard degree {shards}")
+    if cfg.d_ff % shards:
+        return (f"{cfg.name}: d_ff={cfg.d_ff} is not divisible by "
+                f"shard degree {shards}")
+    return None
 
 
 def _bucket(n: int, lo: int = 16, hi: int | None = None) -> int:
@@ -366,6 +392,12 @@ class Engine:
         if name == self.knobs.variant:
             return
         model, params = self.variants[name]
+        err = shard_compat(self.shards, model.cfg)
+        if err is not None:
+            # reject BEFORE preempting anything: an indivisible variant
+            # must not cost in-flight work on its way to the ValueError
+            raise ValueError(f"set_variant({name!r}) at shard degree "
+                             f"{self.shards}: {err}")
         in_flight = set(self.active) | set(self.prefilling)
         if in_flight:
             # reverse-sorted so the front of the queue ends up in rid order
@@ -374,9 +406,75 @@ class Engine:
         self.stats.variant_swaps += 1
         self._bind(model)
 
+    def variant_compatible(self, name: str) -> bool:
+        """Can ``set_variant(name)`` succeed at the current shard degree?
+        (The DegradationLadder asks before walking its quantized rung.)"""
+        if name not in self.variants:
+            return False
+        return shard_compat(self.shards, self.variants[name][0].cfg) is None
+
     @property
     def params(self):
         return self.variants[self.knobs.variant][1]
+
+    # -- shard management (parallelism-degree knob) ------------------------
+    @property
+    def shards(self) -> int:
+        """Current model-parallel degree of the serving plan."""
+        plan = self.model.plan
+        return plan.tp if plan.paged_pool_sharded(self.model.cfg) else 1
+
+    def can_shard(self, n: int) -> str | None:
+        """Why the engine cannot reconfigure to ``n``-way model
+        parallelism (None = it can): paged mode, enough local devices,
+        and every registered variant/drafter divides cleanly."""
+        if n < 1:
+            return f"shard degree must be >= 1, got {n}"
+        if n == 1:
+            return None
+        if not self.paged:
+            return "sharded serving requires the paged mode"
+        if jax.device_count() < n:
+            return f"need {n} devices, have {jax.device_count()}"
+        for kind, reg in (("variant", self.variants),
+                          ("drafter", self.drafters)):
+            for name, (m, _) in reg.items():
+                err = shard_compat(n, m.cfg)
+                if err is not None:
+                    return f"{kind} {name!r}: {err}"
+        return None
+
+    def set_shards(self, n: int) -> None:
+        """Reconfigure the model-parallel degree (costs a pause, like a
+        variant reload): preempt in-flight work, rebuild every registered
+        model under the new plan, transfer params under the new
+        shardings, and rebind.  Raises (without preempting) when
+        ``can_shard`` objects."""
+        if n == self.shards:
+            return
+        err = self.can_shard(n)
+        if err is not None:
+            raise ValueError(f"set_shards({n}): {err}")
+        from repro.serving.spec import serving_plan  # local: import cycle
+        plan = serving_plan(n, param_dtype=self.model.plan.param_dtype)
+        in_flight = set(self.active) | set(self.prefilling)
+        if in_flight:
+            self._preempt(sorted(in_flight, reverse=True))
+
+        def rebuild(m: Model, p):
+            new_m = Model(m.cfg, plan)
+            if plan.mesh is not None:
+                new_p = jax.device_put(p, new_m.param_shardings())
+            else:
+                new_p = jax.device_put(p, jax.devices()[0])
+            return new_m, new_p
+
+        self.variants = {k: rebuild(m, p)
+                         for k, (m, p) in self.variants.items()}
+        self.drafters = {k: rebuild(m, p)
+                         for k, (m, p) in self.drafters.items()}
+        self.stats.shard_swaps += 1
+        self._bind(self.variants[self.knobs.variant][0])
 
     # -- request lifecycle -------------------------------------------------
     def submit(self, req: Request) -> None:

@@ -190,18 +190,14 @@ def _dev_i32(v) -> jnp.ndarray:
 
 
 @partial(jax.jit, donate_argnums=(0,))
-def _dev_set_row(arr, i, row):
-    return arr.at[i].set(row)
-
-
-@partial(jax.jit, donate_argnums=(0,))
-def _dev_set_item(arr, i, v):
-    return arr.at[i].set(v)
-
-
-@partial(jax.jit, donate_argnums=(0,))
-def _dev_set_cell(arr, i, j, v):
-    return arr.at[i, j].set(v)
+def _mirror_update(arr, idx, val):
+    """The single donated choke point for every incremental mirror
+    scatter.  ``idx`` is a tuple of int32 scalars: ``(lane,)`` with a row
+    (or, on a 1-D mirror, scalar) ``val`` rewrites one row/element;
+    ``(lane, pos)`` rewrites one cell.  Each arity is its own jit cache
+    entry of this one function, so per-shard mirrors don't multiply the
+    helper surface."""
+    return arr.at[idx].set(val)
 
 
 def _chain_key(prev: bytes, tokens) -> bytes:
@@ -225,6 +221,13 @@ class PagedCachePool:
         # +1: block 0 is the reserved parking block, never allocated
         self.n_blocks = n_blocks if n_blocks is not None \
             else 1 + n_lanes * self.blocks_per_seq
+        # a sharded pool stripes contiguous block-id ranges across the
+        # model axis; round up so every rank owns an equal stripe (the
+        # extra blocks just enlarge the free list)
+        self.shards = model.plan.tp \
+            if model.plan.paged_pool_sharded(model.cfg) else 1
+        if self.n_blocks % self.shards:
+            self.n_blocks += self.shards - self.n_blocks % self.shards
         self.cache = model.init_paged_cache(self.n_blocks, block_size, dtype)
         self.free_blocks = list(range(self.n_blocks - 1, 0, -1))
         self.free_lanes = list(range(n_lanes - 1, -1, -1))
@@ -272,22 +275,28 @@ class PagedCachePool:
             self._dirty.discard(name)
         return self._dev[name]
 
-    def _touch_row(self, lane: int) -> None:
-        """Mirror one block-table row to the device copy in place."""
-        if "tables" in self._dev and "tables" not in self._dirty:
-            self._dev["tables"] = _dev_set_row(
-                self._dev["tables"], _dev_i32(lane),
-                jax.device_put(self.block_tables[lane].astype(np.int32)))
-        else:
-            self._dirty.add("tables")
+    def mirror_write(self, name: str, lane: int,
+                     pos: int | None = None) -> None:
+        """Mirror one host-side mutation into the persistent device copy.
 
-    def _touch_item(self, name: str, lane: int) -> None:
-        if name in self._dev and name not in self._dirty:
-            self._dev[name] = _dev_set_item(
-                self._dev[name], _dev_i32(lane),
-                _dev_i32(self._host_of(name)[lane]))
-        else:
+        The numpy host array is the source of truth and must already hold
+        the new value; this replays row ``lane`` (or cell ``(lane, pos)``)
+        through the one donated ``_mirror_update`` choke point.  A mirror
+        that does not exist yet (or is already dirty) is just marked dirty
+        and rebuilt whole on next access."""
+        if name not in self._dev or name in self._dirty:
             self._dirty.add(name)
+            return
+        host = self._host_of(name)
+        if pos is None:
+            val = host[lane]
+            val = _dev_i32(val) if np.ndim(val) == 0 else \
+                jax.device_put(np.ascontiguousarray(val, np.int32))
+            idx = (_dev_i32(lane),)
+        else:
+            val = _dev_i32(host[lane, pos])
+            idx = (_dev_i32(lane), _dev_i32(pos))
+        self._dev[name] = _mirror_update(self._dev[name], idx, val)
 
     def adopt_device(self, name: str, arr: jnp.ndarray) -> None:
         """Install a device array produced by the fused decode loop as the
@@ -402,8 +411,8 @@ class PagedCachePool:
         self.lengths[lane] = prompt_len
         self.lane_of[req_id] = lane
         self.blocks_of[req_id] = blks
-        self._touch_row(lane)
-        self._touch_item("positions", lane)
+        self.mirror_write("tables", lane)
+        self.mirror_write("positions", lane)
         return lane
 
     def admit_prefill(self, req_id: int, ctx_len: int,
@@ -432,8 +441,8 @@ class PagedCachePool:
         self.lengths[lane] = len(shared) * self.block_size
         self.lane_of[req_id] = lane
         self.blocks_of[req_id] = blks
-        self._touch_row(lane)
-        self._touch_item("positions", lane)
+        self.mirror_write("tables", lane)
+        self.mirror_write("positions", lane)
         return lane
 
     def ensure_append_blocks(self, req_ids: list, *, horizon: int = 1,
@@ -463,7 +472,7 @@ class PagedCachePool:
                 blks.append(blk)
                 grew = True
             if grew:
-                self._touch_row(lane)
+                self.mirror_write("tables", lane)
         return victims
 
     def release(self, req_id: int) -> None:
@@ -484,8 +493,8 @@ class PagedCachePool:
         self.free_lanes.append(lane)
         self.block_tables[lane, :] = 0       # park the lane on block 0
         self.lengths[lane] = 0
-        self._touch_row(lane)
-        self._touch_item("positions", lane)
+        self.mirror_write("tables", lane)
+        self.mirror_write("positions", lane)
 
     # -- decode-step views -------------------------------------------------
     def positions(self) -> jnp.ndarray:
@@ -502,7 +511,7 @@ class PagedCachePool:
 
     def set_length(self, lane: int, n: int) -> None:
         self.lengths[lane] = n
-        self._touch_item("positions", lane)
+        self.mirror_write("positions", lane)
 
     # -- fault injection + NaN guard ----------------------------------------
     def corrupt_lane(self, lane: int, *, block_idx: int = 0) -> None:
@@ -538,7 +547,7 @@ class PagedCachePool:
 
     def set_last_token(self, lane: int, tok: int) -> None:
         self.last_tokens[lane] = tok
-        self._touch_item("last_tokens", lane)
+        self.mirror_write("last_tokens", lane)
 
     # -- speculative decode: sequence history + drafter KV ------------------
     def hist_dev(self) -> jnp.ndarray:
@@ -552,20 +561,11 @@ class PagedCachePool:
         row = np.zeros(self.token_hist.shape[1], np.int32)
         row[: len(tokens)] = tokens
         self.token_hist[lane] = row
-        if "hist" in self._dev and "hist" not in self._dirty:
-            self._dev["hist"] = _dev_set_row(
-                self._dev["hist"], _dev_i32(lane), jax.device_put(row))
-        else:
-            self._dirty.add("hist")
+        self.mirror_write("hist", lane)
 
     def set_hist_token(self, lane: int, pos: int, tok: int) -> None:
         self.token_hist[lane, pos] = tok
-        if "hist" in self._dev and "hist" not in self._dirty:
-            self._dev["hist"] = _dev_set_cell(
-                self._dev["hist"], _dev_i32(lane), _dev_i32(pos),
-                _dev_i32(tok))
-        else:
-            self._dirty.add("hist")
+        self.mirror_write("hist", lane, pos)
 
     def attach_draft(self, model: Model, dtype=jnp.bfloat16) -> None:
         """Allocate a drafter KV pool with the SAME block geometry, so the

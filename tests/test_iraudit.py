@@ -77,10 +77,20 @@ def test_golden_op_census(audits, name):
 
 def test_registry_invariants_clean_and_budgets_hold(audits):
     """The real registry: zero invariant findings, and every cost row
-    within its pinned budget — the same gate CI runs."""
+    within its pinned budget — the same gate CI runs.  Mesh-geometry
+    entries need more devices than the single-device test session has;
+    they are filtered symmetrically out of the registry sweep and the
+    pinned rows (scripts/iraudit.py audits them under a forced 4-device
+    view, as does tests/_sharded_parity_main.py for the numerics)."""
     pinned = _pinned_entries()
+    avail = jax.device_count()
+    usable = [e for e in ENTRYPOINTS if e.min_devices <= avail]
+    skipped = {e.name for e in ENTRYPOINTS if e.min_devices > avail}
+    pinned = {"meta": pinned["meta"],
+              "entries": {k: v for k, v in pinned["entries"].items()
+                          if k not in skipped}}
     rows = {}
-    for e in ENTRYPOINTS:
+    for e in usable:
         a = audits(e.name)
         findings = run_invariants(a)
         assert findings == [], "\n".join(str(f) for f in findings)
